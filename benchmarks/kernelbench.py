@@ -1,0 +1,87 @@
+"""Kernel micro-benchmarks: interpret-mode wall clock (CPU) + the
+multiply-count reductions that are the paper's currency.
+
+Interpret-mode wall time is NOT TPU performance — the derived column
+(wide multiplies per MAC, bytes per weight) is the roofline-relevant
+output; kernels are validated bit-exactly in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.datapath import INT32, plan_bseg, plan_sdv
+from repro.kernels import ops, ref
+
+
+def _t(fn, n=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def kernel_latencies():
+    rng = np.random.default_rng(0)
+    rows = []
+    # packbits
+    vals = jnp.asarray(rng.integers(-8, 8, (64, 512)).astype(np.int8))
+    rows.append(("kern.packbits.64x512.us",
+                 _t(lambda: ops.pack_weights(vals, w=4, use_kernel=True)),
+                 "int32 words"))
+    # quant matmul 128x512x256 w4
+    x = jnp.asarray(rng.standard_normal((128, 512)).astype(np.float32))
+    wint = jnp.asarray(rng.integers(-8, 8, (512, 256)))
+    wp = ref.pack_words_ref(wint, w=4)
+    sc = jnp.ones((256,), jnp.float32)
+    rows.append(("kern.quant_matmul.128x512x256.us",
+                 _t(lambda: ops.quant_matmul(x, wp, sc, w=4,
+                                             use_kernel=True)),
+                 "w4 weights: 4 bits/weight in HBM"))
+    # sdv matvec
+    plan = plan_sdv(INT32, 4, 8, park_sign_bits=True)
+    w_mat = jnp.asarray(rng.integers(-8, 8, (256, 512)))
+    xq = jnp.asarray(rng.integers(-128, 128, (4, 512)), dtype=jnp.int8)
+    words = ops.prepare_sdv_weights(w_mat, plan)
+    rows.append(("kern.sdv_matvec.4x256x512.us",
+                 _t(lambda: ops.sdv_matvec(xq, words, plan=plan, m=256,
+                                           use_kernel=True)),
+                 f"{plan.n} MACs per int32 multiply"))
+    # bseg conv
+    planb = plan_bseg(INT32, 4, 4)
+    taps = jnp.asarray(rng.integers(-8, 8, (128, 4)))
+    xc = jnp.asarray(rng.integers(-8, 8, (2, 64, 128)), dtype=jnp.int8)
+    kappa, tsum = ops.prepare_bseg_taps(taps, planb)
+    rows.append(("kern.bseg_conv1d.2x64x128.us",
+                 _t(lambda: ops.bseg_conv1d(xc, kappa, tsum, plan=planb,
+                                            n_taps=4, zero_point=8,
+                                            use_kernel=True)),
+                 f"{planb.density} MACs per int32 multiply"))
+    return rows
+
+
+def packed_vs_naive():
+    """The paper's headline currencies on the TPU datapaths."""
+    rows = []
+    for wa, wb in ((8, 8), (4, 8), (4, 4), (2, 4), (2, 2)):
+        try:
+            p = plan_sdv(INT32, wa, wb, park_sign_bits=True)
+            rows.append((f"density.sdv_int32.w{wa}a{wb}", 0.0, p.n))
+        except ValueError:
+            rows.append((f"density.sdv_int32.w{wa}a{wb}", 0.0, 0))
+        try:
+            b = plan_bseg(INT32, wa, wb)
+            rows.append((f"density.bseg_int32.w{wa}a{wb}", 0.0, b.density))
+        except ValueError:
+            rows.append((f"density.bseg_int32.w{wa}a{wb}", 0.0, 0))
+    # memory-side packing: bits per weight in HBM
+    for w in (8, 4, 2):
+        rows.append((f"hbm.bits_per_weight.packed.w{w}", 0.0, w))
+    rows.append(("hbm.bits_per_weight.bf16", 0.0, 16))
+    rows.append(("hbm.decode_weight_traffic_reduction.w4", 0.0, 4.0))
+    return rows

@@ -1,0 +1,38 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (deliverable d).  The
+roofline analysis (deliverable g) is ``benchmarks/roofline.py`` (needs
+the 512-device dry-run environment, so it runs as its own process).
+"""
+import sys
+
+import jax
+
+# DSP48E2/DSP58 emulation words are 48/58-bit -> int64 arithmetic.
+jax.config.update("jax_enable_x64", True)
+
+
+def main() -> None:
+    from benchmarks import kernelbench, paper_tables
+
+    rows = []
+    for fn in (paper_tables.fig5_density,
+               paper_tables.fig8_sdv_scaling,
+               paper_tables.fig9_bseg_scaling,
+               paper_tables.tab2_ultranet,
+               paper_tables.tab3_layers,
+               paper_tables.tab4_maxfreq,
+               kernelbench.kernel_latencies,
+               kernelbench.packed_vs_naive):
+        try:
+            rows.extend(fn())
+        except Exception as e:   # noqa: BLE001
+            rows.append((f"{fn.__name__}.ERROR", 0.0, repr(e)))
+            print(f"error in {fn.__name__}: {e}", file=sys.stderr)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Batched serving with lane-packed W4 weights (the paper's packing on
+the TPU memory roofline): prefill a batch of prompts, then decode with
+the quantized packed parameter tree; compares tokens/s and weight bytes
+vs the bf16 baseline.
+
+Run:  PYTHONPATH=src python examples/serve_packed.py
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.models import (decode_step, init_cache, init_params,
+                          serve_params, values, Rules)
+from repro.models.quantized import PackedLinear
+
+
+def tree_bytes(tree):
+    tot = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        tot += leaf.size * leaf.dtype.itemsize
+    return tot
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced()   # CPU-sized backbone of the family
+    rules = Rules(tp=None, fsdp=None, ep=None, batch=())
+    params = values(init_params(cfg, rules, jax.random.PRNGKey(0)))
+    qparams = serve_params(params, bits=4, min_size=1024)
+    b_bf16 = tree_bytes(params)
+    b_q = tree_bytes(qparams)
+    print(f"weights: bf16 {b_bf16/2**20:.2f} MiB -> packed W4 "
+          f"{b_q/2**20:.2f} MiB ({b_bf16/b_q:.2f}x smaller HBM residency)")
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+        dtype=jnp.int32)
+
+    smax = args.prompt_len + args.new_tokens
+    dec = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+
+    def generate(ptree, label):
+        cache = values(init_cache(cfg, rules, args.batch, smax))
+        # prefill: teacher-force the prompt through decode steps (keeps
+        # the example simple; launch/serve.py shows bulk prefill)
+        tok = prompts[:, :1]
+        t0 = time.perf_counter()
+        outs = []
+        for i in range(smax - 1):
+            logits, cache = dec(ptree, cache, tok)
+            if i + 1 < args.prompt_len:
+                tok = prompts[:, i + 1:i + 2]
+            else:
+                tok = jnp.argmax(logits[:, -1:, :cfg.vocab], axis=-1
+                                 ).astype(jnp.int32)
+                outs.append(np.asarray(tok)[:, 0])
+        dt = time.perf_counter() - t0
+        toks = args.batch * (smax - 1)
+        print(f"{label}: {toks/dt:8.1f} tok/s  (greedy tail: "
+              f"{np.stack(outs, 1)[0][:8]})")
+        return np.stack(outs, 1)
+
+    out_q = generate(qparams, "packed W4")
+    out_f = generate(params, "bf16     ")
+    # random-init logits are near-uniform, so greedy tokens are not a
+    # meaningful agreement metric; compare the logit surfaces instead
+    lq, _ = decode_step(cfg, qparams,
+                        values(init_cache(cfg, rules, args.batch, smax)),
+                        prompts[:, :1])
+    lf, _ = decode_step(cfg, params,
+                        values(init_cache(cfg, rules, args.batch, smax)),
+                        prompts[:, :1])
+    mae = float(jnp.mean(jnp.abs(lq - lf)))
+    rng_sp = float(jnp.abs(lf).max())
+    print(f"logit MAE packed-vs-bf16: {mae:.4f} (range ±{rng_sp:.2f})")
+
+
+if __name__ == "__main__":
+    main()

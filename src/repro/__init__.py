@@ -1,0 +1,2 @@
+"""repro: arithmetic packing on wide integer datapaths, in JAX for TPU."""
+__version__ = "1.0.0"

@@ -1,0 +1,23 @@
+"""Core arithmetic-packing library — the paper's contribution.
+
+Exports the datapath specs, the SDV (matvec) and BSEG (conv) packed
+arithmetic engines, and the operational-density solvers (Fig. 5).
+"""
+from .datapath import (BSEGPlan, DATAPATHS, DSP48E2, DSP58, DatapathSpec,
+                       FP32M, INT32, SDVPlan, bseg_density, plan_bseg,
+                       plan_sdv, sdv_density, sdv_lane_size,
+                       sdv_max_accumulation_depth)
+from .signed_split import pack, pack_signed, pack_unsigned, split_signed
+from .sdv import sdv_extract, sdv_macc, sdv_matvec, sdv_pack
+from .bseg import (bseg_conv1d, bseg_conv1d_grouped, bseg_num_multiplies,
+                   bseg_pack_inputs, bseg_pack_kernel)
+
+__all__ = [
+    "BSEGPlan", "DATAPATHS", "DSP48E2", "DSP58", "DatapathSpec", "FP32M",
+    "INT32", "SDVPlan", "bseg_density", "plan_bseg", "plan_sdv",
+    "sdv_density", "sdv_lane_size", "sdv_max_accumulation_depth",
+    "pack", "pack_signed", "pack_unsigned",
+    "split_signed", "sdv_extract", "sdv_macc", "sdv_matvec", "sdv_pack",
+    "bseg_conv1d", "bseg_conv1d_grouped", "bseg_num_multiplies",
+    "bseg_pack_inputs", "bseg_pack_kernel",
+]

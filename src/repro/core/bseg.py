@@ -1,0 +1,223 @@
+"""Binary Segmentation convolution (paper Sec. III-D, Figs. 2c, 6, 7).
+
+BSEG packs *both* multiplier inputs: n_k kernel taps (reversed) into the
+first factor, n_i input samples into the second.  Lane ``p`` of the
+product then holds  sum_{i+j=p} K_rev[i] * I[t+j]  — convolution partial
+sums computed *inside* the multiplier array (Pan's binary segmentation).
+
+Dataflow (Fig. 6), one kernel group of n_k taps:
+  * step t (t advances by n_i):  W = kappa * iota_t + C_t
+  * after the add, lanes p < n_i hold *complete* outputs
+    o = t - n_k + 1 + p  -> extracted and emitted;
+  * remaining lanes carry to the next step:  C_{t+n_i} is the word
+    shifted down n_i lanes — on the DSP this is the C-port / cascade.
+
+Guard bits (Eqs. 9/10): each accumulation lane is biased by 2^(L-1) so
+lane values stay within [0, 2^L) — no spill-over can occur, in either
+direction.  Between steps every carried lane is *sliced* (Fig. 7): the
+low w_l bits stay on the datapath, the high part is extracted to fabric
+(here: accumulated straight into the output buffer) and replaced by a
+fresh guard bias.
+
+Kernels longer than n_k taps split into ceil(n/n_k) groups whose
+results combine through an adder tree (Sec. III-D: "In a parallel
+computation of the rows, an adder tree is used").
+
+Works on every datapath, including FP32M: all lane values stay inside
+the exact product budget by construction, so fp32 arithmetic is exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .datapath import BSEGPlan
+from .signed_split import pack_signed, pack_unsigned, require_dtype
+
+
+def word_dtype(plan: BSEGPlan):
+    if not plan.spec.exact_wrap:
+        return jnp.float32
+    return jnp.int32 if plan.spec.w_word <= 32 else jnp.int64
+
+
+def _is_float(dt) -> bool:
+    return jnp.issubdtype(jnp.dtype(dt), jnp.floating)
+
+
+def _shift_down(word, bits: int):
+    if _is_float(word.dtype):
+        return jnp.floor(word / float(2 ** bits))
+    return word >> bits
+
+
+def _mod_pow2(word, bits: int):
+    if _is_float(word.dtype):
+        q = float(2 ** bits)
+        return word - jnp.floor(word / q) * q
+    return word & ((1 << bits) - 1)
+
+
+def bseg_pack_kernel(taps: jnp.ndarray, plan: BSEGPlan) -> jnp.ndarray:
+    """Pack (reversed) kernel taps [..., n_k] into the first factor via
+    the pre-adder (taps are signed)."""
+    assert taps.shape[-1] == plan.n_k
+    return pack_signed(taps[..., ::-1], plan.w_k, plan.lane,
+                       word_dtype(plan))
+
+
+def bseg_pack_inputs(window: jnp.ndarray, plan: BSEGPlan) -> jnp.ndarray:
+    """Pack unsigned input samples [..., n_i] into the second factor."""
+    assert window.shape[-1] == plan.n_i
+    return pack_unsigned(window, plan.w_i, plan.lane, word_dtype(plan))
+
+
+def _bias_word(plan: BSEGPlan, lanes_from: int, lanes_to: int, dtype):
+    """sum_{p in [lanes_from, lanes_to)} 2^(pL) * 2^(L-1)."""
+    val = sum((2 ** (p * plan.lane)) * plan.bias
+              for p in range(lanes_from, lanes_to))
+    if _is_float(dtype):
+        return jnp.asarray(float(val), dtype)
+    return jnp.asarray(val, dtype)
+
+
+def bseg_conv1d_grouped(taps: jnp.ndarray, inputs: jnp.ndarray,
+                        plan: BSEGPlan) -> jnp.ndarray:
+    """Single-group BSEG pipeline: taps [..., n_k], inputs [..., m]
+    (unsigned, within w_i).  Returns the *full* correlation, length
+    m - n_k + 1, exact.
+
+    The scan below is the cycle-true Fig. 6 schedule; batch dims are
+    vectorized.
+    """
+    wdt = word_dtype(plan)
+    require_dtype(wdt)
+    n_k, n_i, L = plan.n_k, plan.n_i, plan.lane
+    n_lanes = plan.n_lanes
+    m = inputs.shape[-1]
+    m_out = m - n_k + 1
+    assert m_out >= 1
+
+    # steps: emissions at step t cover outputs t-n_k+1 .. t-n_k+n_i,
+    # so t must reach m_out - 1 + n_k - 1; steps advance by n_i.
+    n_steps = -(-(m_out + n_k - 1) // n_i)
+    # inputs consumed at step t: positions t .. t+n_i-1
+    pad_in = n_steps * n_i + n_i - m
+    inputs_p = jnp.pad(inputs, [(0, 0)] * (inputs.ndim - 1)
+                       + [(0, max(0, pad_in))])
+
+    # pre-pack every input window (the BSEG "input generator"):
+    windows = jnp.stack(
+        [inputs_p[..., j:j + inputs_p.shape[-1] - n_i + 1]
+         for j in range(n_i)], axis=-1)
+    iotas = bseg_pack_inputs(windows, plan)        # [..., positions]
+
+    kappa = bseg_pack_kernel(taps, plan)           # [...]
+    batch = kappa.shape
+
+    # output accumulation buffer with margins: writes land at
+    # buf[t + p] for product lane p -> output o = t + p - (n_k-1),
+    # i.e. buf index = o + n_k - 1; allocate slack for tail lanes.
+    buf_len = m_out + n_k - 1 + n_lanes + n_i
+    acc0 = jnp.zeros(batch + (buf_len,), wdt)
+
+    # carry word C: lanes [0, n_lanes) biased (low n_k-1 lanes hold
+    # resident low parts, the rest fresh bias).
+    c0 = jnp.broadcast_to(_bias_word(plan, 0, n_lanes, wdt),
+                          batch).astype(wdt)
+
+    bias_low = _bias_word(plan, 0, n_i, wdt)
+    bias_top = _bias_word(plan, n_lanes - n_i, n_lanes, wdt)
+    lane_scale = [float(2 ** (p * L)) if _is_float(wdt) else (1 << (p * L))
+                  for p in range(n_lanes + 1)]
+
+    def step(carry, t):
+        acc, c = carry
+        iota = jax.lax.dynamic_index_in_dim(
+            iotas, t * n_i, axis=-1, keepdims=False)
+        word = kappa * iota + c                    # the wide MAC (+C port)
+
+        # --- extract the n_i completed low lanes ------------------------
+        out_vals = []
+        for p in range(n_i):
+            f = _mod_pow2(_shift_down(word, p * L), L)
+            out_vals.append(f - plan.bias)         # remove guard bias
+        out_win = jnp.stack(out_vals, axis=-1)     # [..., n_i]
+
+        # --- slice carried lanes (Fig. 7): keep w_l bits, extract high --
+        hi_vals = []
+        lo_word = jnp.zeros_like(word)
+        for idx, p in enumerate(range(n_i, n_lanes)):
+            f = _mod_pow2(_shift_down(word, p * L), L)
+            lo = _mod_pow2(f, plan.w_l)
+            hi = (f - lo) - plan.bias              # tracked in fabric
+            hi_vals.append(hi)
+            # re-biased resident value, shifted down n_i lanes:
+            lo_word = lo_word + (lo + plan.bias) * lane_scale[p - n_i]
+        # fresh bias for the lanes newly exposed at the top:
+        c_next = lo_word + bias_top
+        if not hi_vals:
+            hi_win = jnp.zeros(batch + (0,), wdt)
+        else:
+            hi_win = jnp.stack(hi_vals, axis=-1)   # [..., n_lanes-n_i]
+
+        # --- scatter into the output buffer ----------------------------
+        upd = jax.lax.dynamic_slice_in_dim(acc, t * n_i, n_i, axis=-1)
+        acc = jax.lax.dynamic_update_slice_in_dim(
+            acc, upd + out_win, t * n_i, axis=-1)
+        if n_lanes > n_i:
+            upd2 = jax.lax.dynamic_slice_in_dim(
+                acc, t * n_i + n_i, n_lanes - n_i, axis=-1)
+            acc = jax.lax.dynamic_update_slice_in_dim(
+                acc, upd2 + hi_win, t * n_i + n_i, axis=-1)
+        return (acc, c_next), None
+
+    (acc, _), _ = jax.lax.scan(step, (acc0, c0),
+                               jnp.arange(n_steps, dtype=jnp.int32))
+    # buf index = o + n_k - 1
+    del bias_low  # (absorbed into the per-lane bias subtraction above)
+    return jax.lax.slice_in_dim(acc, n_k - 1, n_k - 1 + m_out, axis=-1)
+
+
+def bseg_conv1d(kernel: jnp.ndarray, inputs: jnp.ndarray,
+                plan: BSEGPlan, *, input_zero_point: int = 0) -> jnp.ndarray:
+    """Full 1-D correlation  y[o] = sum_q kernel[..., q] inputs[..., o+q]
+    through the BSEG datapath, for arbitrary kernel length.
+
+    kernel: [..., n] signed ints within w_k.
+    inputs: [..., m]; must be unsigned within w_i, or signed with
+      ``input_zero_point`` (the standard zero-point correction —
+      y = sum K (I + zp) - zp * sum K — keeps the datapath unsigned as
+      the paper's Eqs. 9/10 assume).
+    """
+    n = kernel.shape[-1]
+    m = inputs.shape[-1]
+    if input_zero_point:
+        inputs = inputs + input_zero_point
+    groups = -(-n // plan.n_k)
+    pad_k = groups * plan.n_k - n
+    kern = jnp.pad(kernel, [(0, 0)] * (kernel.ndim - 1) + [(0, pad_k)])
+    # zero-pad inputs so the (zero-tap-padded) last group stays in range;
+    # the padding only ever multiplies zero taps.
+    inputs = jnp.pad(inputs, [(0, 0)] * (inputs.ndim - 1) + [(0, pad_k)])
+    m_out = m - n + 1
+    total = None
+    for g in range(groups):
+        taps = kern[..., g * plan.n_k:(g + 1) * plan.n_k]
+        shifted = inputs[..., g * plan.n_k:]
+        y_g = bseg_conv1d_grouped(taps, shifted, plan)[..., :m_out]
+        total = y_g if total is None else total + y_g      # adder tree
+    if input_zero_point:
+        corr = input_zero_point * jnp.sum(
+            kernel.astype(total.dtype), axis=-1, keepdims=True)
+        total = total - corr
+    return total
+
+
+def bseg_num_multiplies(n_taps: int, m: int, plan: BSEGPlan) -> int:
+    """Wide multiplies consumed by one bseg_conv1d call (for the
+    density / resource accounting used in the benchmarks)."""
+    groups = -(-n_taps // plan.n_k)
+    m_out = m - n_taps + 1
+    n_steps = -(-(m_out + plan.n_k - 1) // plan.n_i)
+    return groups * n_steps

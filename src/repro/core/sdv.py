@@ -1,0 +1,155 @@
+"""Soft Datapath Vectorization (paper Sec. III-C, Figs. 2b & 4).
+
+SDV packs ``n`` elements a_0..a_{n-1} into the multiplicand of a wide
+multiplier and runs a shared multiplier b through the other port:
+
+    (sum_i 2^{iL} a_i) * b = sum_i 2^{iL} (a_i b)
+
+With the Eq. 4 lane size  L >= w_a + w_b - 1  (one bit *narrower* than
+the product), products regularly spill into the neighbouring lane.  The
+architecture tracks those spills externally:
+
+  * a cheap reference multiplier (on FPGA: one fractured LUT) produces
+    the two LSBs of every true product — here, ``(a & 3)(b & 3) & 3``;
+  * after each accumulator update, the observed low two bits of each
+    lane are compared against the predicted ones; the mod-4 mismatch
+    *is* the spill received from the right-hand neighbour (the possible
+    spill values, [-1:1] signed or [0:2] unsigned, are fully separated
+    mod 4 — the paper's dimensioning argument);
+  * spill totals S_i are accumulated in fabric and the final lane
+    results are fixed up per Eq. 3:
+        R̂_i = (2^L S_i + R_i) - S_{i-1}.
+
+Everything here is exact integer arithmetic.  Wrapping past the word
+top is harmless because detection is differential (mod 4) — precisely
+why the technique needs ``exact_wrap`` datapaths (int32 / DSP ALUs),
+not fp32.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .datapath import SDVPlan
+from .signed_split import pack, require_dtype
+
+
+def word_dtype(plan: SDVPlan):
+    if not plan.spec.exact_wrap:
+        raise ValueError(
+            f"SDV spill-over tracking needs exact-wrap arithmetic; "
+            f"datapath {plan.spec.name} rounds (fp32)")
+    return jnp.int32 if plan.spec.w_word <= 32 else jnp.int64
+
+
+def sdv_pack(values: jnp.ndarray, plan: SDVPlan) -> jnp.ndarray:
+    """Pack elements along the last axis (size plan.n) into words."""
+    assert values.shape[-1] == plan.n, (values.shape, plan.n)
+    return pack(values, plan.w_a, plan.lane, word_dtype(plan),
+                signed=plan.signed_a)
+
+
+def _lane_starts(plan: SDVPlan):
+    """Bit offsets of the n real lanes plus the virtual observer lane
+    above the top element (tracks spill out of lane n-1)."""
+    starts = [i * plan.lane for i in range(plan.n + 1)]
+    if starts[-1] + 2 > plan.spec.w_word:
+        raise ValueError(
+            f"no room for the virtual observer lane: {plan}")
+    return starts
+
+
+def _fields_mod4(word: jnp.ndarray, plan: SDVPlan) -> jnp.ndarray:
+    """Low two bits of every (real + virtual) lane: [..., n+1]."""
+    starts = _lane_starts(plan)
+    shifted = jnp.stack([(word >> s) for s in starts], axis=-1)
+    return shifted & 3
+
+
+def _decode_spill(mismatch: jnp.ndarray, signed: bool) -> jnp.ndarray:
+    """Map a mod-4 residue mismatch to the actual spill value.
+
+    signed products: possible spills [-1, 0, 1]  -> {3, 0, 1}
+    unsigned:        possible spills [0, 1, 2]   -> {0, 1, 2}
+    """
+    if signed:
+        return jnp.where(mismatch == 3, -1, mismatch)
+    return mismatch
+
+
+def sdv_macc(packed: jnp.ndarray, lsb2: jnp.ndarray, bs: jnp.ndarray,
+             plan: SDVPlan) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run a packed multiply-accumulate chain with spill tracking.
+
+    Args:
+      packed: [K, ...] packed multiplicand words (one per MAC step).
+      lsb2:   [K, ..., n] the two LSBs of each *element* (a_i & 3) —
+              the fabric side-band feeding the reference multiplier.
+      bs:     [K, ...] shared multipliers (integers within w_b).
+      plan:   lane plan.
+
+    Returns:
+      (word, spills): final accumulator word [...] and spill totals
+      [..., n] (S_0..S_{n-1}).
+    """
+    wdt = word_dtype(plan)
+    signed = plan.signed_a or plan.signed_b
+    n = plan.n
+
+    def step(carry, inp):
+        word, spills = carry
+        pw, l2, b = inp
+        prev = _fields_mod4(word, plan)                    # [..., n+1]
+        word2 = word + pw * b.astype(wdt)                  # the DSP MAC
+        obs = _fields_mod4(word2, plan)
+        # reference products, two LSBs only (fractured-LUT analogue):
+        p4 = (l2 * (b.astype(l2.dtype) & 3)[..., None]) & 3  # [..., n]
+        pred = jnp.concatenate(
+            [(prev[..., :n] + p4) & 3, prev[..., n:]], axis=-1)
+        mismatch = (obs - pred) & 3                        # [..., n+1]
+        delta = _decode_spill(mismatch, signed)
+        # spill observed entering lane i came out of lane i-1:
+        spills = spills + delta[..., 1:].astype(spills.dtype)
+        return (word2, spills), None
+
+    word0 = jnp.zeros(packed.shape[1:], wdt)
+    spills0 = jnp.zeros(packed.shape[1:] + (n,), jnp.int32)
+    (word, spills), _ = jax.lax.scan(step, (word0, spills0),
+                                     (packed, lsb2, bs))
+    return word, spills
+
+
+def sdv_extract(word: jnp.ndarray, spills: jnp.ndarray,
+                plan: SDVPlan) -> jnp.ndarray:
+    """Eq. 3 fix-up:  R̂_i = (2^L S_i + R_i) - S_{i-1}  -> [..., n]."""
+    mask = (1 << plan.lane) - 1
+    starts = _lane_starts(plan)[: plan.n]
+    fields = jnp.stack([(word >> s) & mask for s in starts], axis=-1)
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(spills[..., :1]), spills[..., :-1]], axis=-1)
+    res = (spills.astype(word.dtype) << plan.lane) + fields \
+        - s_prev.astype(word.dtype)
+    return res
+
+
+def sdv_matvec(w_mat: jnp.ndarray, x_vec: jnp.ndarray,
+               plan: SDVPlan) -> jnp.ndarray:
+    """Exact integer matrix-vector product through the SDV datapath.
+
+    FINN mapping: lanes = output channels (PE direction), MAC steps =
+    input channels.  w_mat [M, K] (elements within w_a), x_vec [K]
+    (within w_b).  Returns y [M] = w_mat @ x_vec, bit-exact.
+    """
+    m, k = w_mat.shape
+    n = plan.n
+    groups = -(-m // n)
+    pad = groups * n - m
+    wp = jnp.pad(w_mat, ((0, pad), (0, 0))).reshape(groups, n, k)
+    packed = sdv_pack(jnp.moveaxis(wp, -1, 0), plan)       # [K, groups]
+    lsb2 = jnp.moveaxis(wp, -1, 0) & 3                     # [K, groups, n]
+    bs = jnp.broadcast_to(x_vec[:, None], (k, groups))
+    word, spills = sdv_macc(packed, lsb2, bs, plan)
+    lanes = sdv_extract(word, spills, plan)                # [groups, n]
+    return lanes.reshape(groups * n)[:m]

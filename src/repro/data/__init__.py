@@ -1,0 +1,4 @@
+"""Data pipeline."""
+from .pipeline import SyntheticLMData
+
+__all__ = ["SyntheticLMData"]

@@ -1,0 +1,6 @@
+"""FINN-analogue dataflow resource/throughput estimator."""
+from .resource import (bseg_conv_unit, sdv_matvec_unit, ultranet_tables,
+                       UnitEstimate)
+
+__all__ = ["bseg_conv_unit", "sdv_matvec_unit", "ultranet_tables",
+           "UnitEstimate"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Layout:
+  sdv_matvec.py   SDV packed GEMV (pre-adder + mod-4 spill tracker)
+  bseg_conv1d.py  BSEG packed depthwise conv (guard bits + hi/lo staging)
+  quant_matmul.py unpack-in-kernel MXU matmul (packed_memory mode)
+  packbits.py     dense w-bit <-> int32 lane-word layout
+  ops.py          jit'd wrappers (the public API; pure-jnp fallbacks)
+  ref.py          pure-jnp oracles for every kernel
+"""

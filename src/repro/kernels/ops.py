@@ -1,0 +1,191 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op handles layout preparation (weight packing, padding, transposes,
+zero points, dequantization scales) and exposes a ``use_kernel`` switch:
+``True`` runs the Pallas kernel (interpret mode on CPU, compiled on
+TPU), ``False`` runs an equivalent pure-jnp path — the form the model
+layer lowers in the multi-pod dry-run, where XLA owns the fusion.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bseg as core_bseg
+from repro.core import signed_split
+from repro.core.datapath import BSEGPlan, SDVPlan
+from . import bseg_conv1d as bseg_kernel
+from . import quant_matmul as qmm_kernel
+from . import packbits
+from . import ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# packbits
+# ---------------------------------------------------------------------------
+
+def pack_weights(w_int: jnp.ndarray, *, w: int,
+                 use_kernel: bool = False) -> jnp.ndarray:
+    """Dense [m, n] ints -> [m, n/(32/w)] int32 lane words."""
+    if use_kernel:
+        return packbits.pack_words(w_int.astype(jnp.int8), w=w,
+                                   interpret=_on_cpu())
+    return ref.pack_words_ref(w_int, w=w)
+
+
+def unpack_weights(packed: jnp.ndarray, *, w: int,
+                   use_kernel: bool = False) -> jnp.ndarray:
+    if use_kernel:
+        return packbits.unpack_words(packed, w=w, interpret=_on_cpu())
+    return ref.unpack_words_ref(packed, w=w)
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul  (packed_memory execution mode)
+# ---------------------------------------------------------------------------
+
+def quant_matmul(x: jnp.ndarray, w_packed: jnp.ndarray, scale: jnp.ndarray,
+                 *, w: int, use_kernel: bool = True,
+                 block_m: int = 128, block_n: int = 256,
+                 block_k: int = 512) -> jnp.ndarray:
+    """x [m, k] @ dequant(w_packed [k, n/(32/w)]) -> [m, n] f32."""
+    if use_kernel:
+        return qmm_kernel.quant_matmul(
+            x, w_packed, scale, w=w, bm=block_m, bn=block_n, bk=block_k,
+            interpret=_on_cpu())
+    w_int = ref.unpack_words_ref(w_packed.reshape(-1, w_packed.shape[-1]),
+                                 w=w).reshape(w_packed.shape[0], -1)
+    return ref.quant_matmul_ref(x, w_int, scale)
+
+
+# ---------------------------------------------------------------------------
+# sdv_matvec  (packed_compute_sdv execution mode)
+# ---------------------------------------------------------------------------
+
+def prepare_sdv_weights(w_int: jnp.ndarray, plan: SDVPlan) -> jnp.ndarray:
+    """[M, K] ints (w_a-bit signed) -> [K, G] int32 storage words.
+
+    Word layout: sign-sliced remainder fields (D) in the low
+    ``plan.packed_width`` bits, the n sign bits parked above — the two
+    pre-adder operands in one word.
+    """
+    m, k = w_int.shape
+    n = plan.n
+    g = -(-m // n)
+    wp = jnp.pad(w_int, ((0, g * n - m), (0, 0))).reshape(g, n, k)
+    r, s = signed_split.split_signed(wp.astype(jnp.int32), plan.w_a)
+    word = jnp.zeros((g, k), jnp.int32)
+    for i in range(n):
+        word = word | (r[:, i, :].astype(jnp.int32) << (i * plan.lane))
+        word = word | (s[:, i, :].astype(jnp.int32)
+                       << (plan.packed_width + i))
+    return word.T                                           # [K, G]
+
+
+def sdv_matvec(x_q: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
+               m: int, use_kernel: bool = True,
+               block_b: int = 8, block_g: int = 128,
+               block_k: int = 512) -> jnp.ndarray:
+    """Batched exact integer GEMV through the SDV datapath.
+
+    x_q: [B, K] int8 activations, w_words: [K, G] from
+    ``prepare_sdv_weights``; returns [B, m] int32.
+    """
+    from . import sdv_matvec as sdv_kernel
+    b, k = x_q.shape
+    if use_kernel:
+        block_k = min(block_k, k)
+        if k % block_k:
+            block_k = k  # fall back to a single K block
+        lanes = sdv_kernel.sdv_matvec(
+            x_q.T, w_words, plan=plan, bb=block_b, bg=block_g, bk=block_k,
+            interpret=_on_cpu())                            # [B, G, n]
+        return lanes.reshape(b, -1)[:, :m]
+    # pure-jnp path: unpack words back to ints and do the exact GEMV
+    g = w_words.shape[1]
+    d_mask = (1 << plan.packed_width) - 1
+    d_word = w_words & d_mask
+    vals = []
+    for i in range(plan.n):
+        r_i = (d_word >> (i * plan.lane)) & ((1 << (plan.w_a - 1)) - 1)
+        s_i = (w_words >> (plan.packed_width + i)) & 1
+        vals.append(r_i - (s_i << (plan.w_a - 1)))
+    w_int = jnp.stack(vals, axis=-1).reshape(k, g * plan.n)  # [K, M_pad]
+    y = ref.sdv_matvec_ref(x_q, w_int.T)
+    return y[:, :m]
+
+
+# ---------------------------------------------------------------------------
+# bseg_conv1d  (packed_compute_bseg execution mode)
+# ---------------------------------------------------------------------------
+
+def prepare_bseg_taps(taps: jnp.ndarray, plan: BSEGPlan):
+    """[C, n] signed taps -> ([G, C] int32 packed factors, [C] tap sums).
+
+    Tap groups are packed reversed through the pre-adder; the tap sums
+    feed the zero-point correction.
+    """
+    c, n = taps.shape
+    groups = -(-n // plan.n_k)
+    tp = jnp.pad(taps, ((0, 0), (0, groups * plan.n_k - n)))
+    kappas = []
+    for gi in range(groups):
+        seg = tp[:, gi * plan.n_k:(gi + 1) * plan.n_k]
+        kappas.append(core_bseg.bseg_pack_kernel(seg, plan))
+    kappa = jnp.stack(kappas, axis=0).astype(jnp.int32)      # [G, C]
+    return kappa, jnp.sum(taps.astype(jnp.int32), axis=-1)
+
+
+def bseg_conv1d(x_q: jnp.ndarray, kappa: jnp.ndarray, tap_sum: jnp.ndarray,
+                *, plan: BSEGPlan, n_taps: int, zero_point: int = 0,
+                use_kernel: bool = True) -> jnp.ndarray:
+    """Depthwise causal conv1d: x_q [B, S, C] int8 (signed, zero_point
+    shifts it to the unsigned datapath domain); returns [B, S, C] i32."""
+    b, s, c = x_q.shape
+    n = n_taps
+    n_groups = kappa.shape[0]
+    if not use_kernel:
+        taps = _unpack_bseg_taps(kappa, plan, n)
+        return ref.conv1d_causal_ref(x_q, taps)
+    xu = (x_q.astype(jnp.int32) + zero_point).astype(jnp.int8)
+    n_steps = -(-(s + plan.n_k - 1) // plan.n_i)
+    need = (n_steps - 1) * plan.n_i + (n_groups - 1) * plan.n_k + plan.n_i
+    # the causal left pad is signed-zero, i.e. the *zero point* in the
+    # unsigned datapath domain (the uniform zp*sum(taps) correction then
+    # holds at the boundary too); right pad only feeds discarded outputs.
+    x_pad = jnp.pad(xu, ((0, 0), (n - 1, max(0, need - (s + n - 1))), (0, 0)),
+                    constant_values=zero_point)
+    y = bseg_kernel.bseg_conv1d(x_pad, kappa, plan=plan, s_out=s,
+                                interpret=_on_cpu())
+    if zero_point:
+        y = y - zero_point * tap_sum[None, None, :]
+    return y
+
+
+def _unpack_bseg_taps(kappa: jnp.ndarray, plan: BSEGPlan,
+                      n_taps: int) -> jnp.ndarray:
+    """Recover [C, n] signed taps from packed factors (test/fallback)."""
+    groups = kappa.shape[0]
+    segs = []
+    for gi in range(groups):
+        word = kappa[gi].astype(jnp.int64) if kappa.dtype == jnp.int64 \
+            else kappa[gi].astype(jnp.int32)
+        vals = []
+        rem = word
+        # lanes hold the arithmetic sum; decode low-to-high with borrow
+        for i in range(plan.n_k):
+            f = (rem >> (i * plan.lane)) & ((1 << plan.lane) - 1)
+            v = jnp.where(f >= (1 << (plan.lane - 1)), f - (1 << plan.lane), f)
+            vals.append(v)
+            rem = rem - (v << (i * plan.lane))
+        seg = jnp.stack(vals[::-1], axis=-1)                 # un-reverse
+        segs.append(seg)
+    taps = jnp.concatenate(segs, axis=-1)[:, :n_taps]
+    return taps.astype(jnp.int32)

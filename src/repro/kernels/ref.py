@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are asserted against in tests
+(`assert_allclose` / exact equality for integer paths).  They use no
+packing at all — plain integer/float math.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unpack_words_ref(packed: jnp.ndarray, *, w: int) -> jnp.ndarray:
+    per = 32 // w
+    parts = []
+    for i in range(per):
+        f = (packed >> (i * w)) & ((1 << w) - 1)
+        f = jnp.where(f >= (1 << (w - 1)), f - (1 << w), f)
+        parts.append(f.astype(jnp.int8))
+    return jnp.stack(parts, axis=-1).reshape(packed.shape[0], -1)
+
+
+def pack_words_ref(vals: jnp.ndarray, *, w: int) -> jnp.ndarray:
+    per = 32 // w
+    m, n = vals.shape
+    v = vals.astype(jnp.int32).reshape(m, n // per, per)
+    word = jnp.zeros((m, n // per), jnp.int32)
+    for i in range(per):
+        word = word | ((v[..., i] & ((1 << w) - 1)) << (i * w))
+    return word
+
+
+def quant_matmul_ref(x: jnp.ndarray, w_int: jnp.ndarray,
+                     scale: jnp.ndarray) -> jnp.ndarray:
+    """x [m, k] float  @  (w_int [k, n] ints * scale [n])  -> [m, n] f32."""
+    return (x.astype(jnp.float32) @ w_int.astype(jnp.float32)) \
+        * scale[None, :].astype(jnp.float32)
+
+
+def sdv_matvec_ref(x_int: jnp.ndarray, w_int: jnp.ndarray) -> jnp.ndarray:
+    """Exact integer GEMV batch: x [b, k] ints, w [m, k] ints -> [b, m] i32."""
+    return (x_int.astype(jnp.int32) @ w_int.astype(jnp.int32).T)
+
+
+def conv1d_causal_ref(x_int: jnp.ndarray, taps: jnp.ndarray) -> jnp.ndarray:
+    """Exact depthwise causal 1-D correlation.
+
+    x [b, s, c] ints, taps [c, n] ints ->  y [b, s, c] i32 with
+    y[b, s, c] = sum_q taps[c, q] * x[b, s - (n-1) + q, c]  (left zero pad).
+    """
+    n = taps.shape[-1]
+    x32 = x_int.astype(jnp.int32)
+    xp = jnp.pad(x32, ((0, 0), (n - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x32)
+    for q in range(n):
+        y = y + taps[:, q][None, None, :].astype(jnp.int32) \
+            * xp[:, q:q + x_int.shape[1], :]
+    return y

@@ -1,0 +1,144 @@
+"""SDV packed GEMV Pallas kernel (paper Sec. III-C on the TPU VPU).
+
+One int32 multiply carries ``n`` low-bit MACs: n output channels are
+lane-packed into a single multiplicand word, the activation is the
+shared multiplier.  The kernel reproduces the paper's architecture
+end to end, on-chip:
+
+  * HBM storage: one int32 word per (output-group, k) holding the
+    sign-sliced remainder fields (the D word) plus the collected sign
+    bits parked above the packed field;
+  * the pre-adder: ``packed = D - A`` is materialized inside the kernel
+    (Fig. 3) — two VPU ops, no extra memory traffic;
+  * the fractured-LUT reference multiplier: 2-LSB products mod 4;
+  * the spill-over tracker: mod-4 mismatch -> spill in [-1, 1],
+    accumulated per lane (Fig. 4);
+  * the Eq. 3 extractor on the final k step.
+
+Grid: (B/bb, G/bg, K/bk) with K innermost; the accumulator word and the
+spill totals live in VMEM scratch across K steps.  Layouts are K-major
+so the per-step slice is a sublane read.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.datapath import SDVPlan
+
+
+def _lsb2(d_word, sign_bits, i: int, lane: int, w_a: int):
+    """Two LSBs of element i (a_i & 3) from the D fields + sign bits."""
+    r2 = (d_word >> (i * lane)) & 3
+    if w_a >= 3:
+        return r2                       # 2^(w_a-1) = 0 (mod 4)
+    s = (sign_bits >> i) & 1
+    return (r2 + 2 * s) & 3             # w_a == 2: a = r - 2 s
+
+
+def _body(plan_n: int, lane: int, w_a: int, sign_shift: int, nsteps_k: int,
+          bk: int, x_ref, w_ref, o_ref, word_ref, spill_ref):
+    k_step = pl.program_id(2)
+    n = plan_n
+
+    @pl.when(k_step == 0)
+    def _init():
+        word_ref[...] = jnp.zeros_like(word_ref)
+        spill_ref[...] = jnp.zeros_like(spill_ref)
+
+    xb = x_ref[...].astype(jnp.int32)     # [bk, bb]
+    wbw = w_ref[...]                      # [bk, bg] int32 (D | signs<<shift)
+    d_mask = (1 << sign_shift) - 1
+
+    def step(j, carry):
+        word, spills = carry
+        xk = jax.lax.dynamic_index_in_dim(xb, j, 0, keepdims=False)   # [bb]
+        stored = jax.lax.dynamic_index_in_dim(wbw, j, 0, keepdims=False)
+        d_word = stored & d_mask
+        sign_bits = (stored >> sign_shift) & ((1 << n) - 1)
+        # ---- the pre-adder: packed = D - A (Fig. 3) --------------------
+        a_word = jnp.zeros_like(d_word)
+        for i in range(n):
+            a_word += ((sign_bits >> i) & 1) << (i * lane + w_a - 1)
+        packed = d_word - a_word                                      # [bg]
+        # ---- wide MAC --------------------------------------------------
+        word2 = word + packed[None, :] * xk[:, None]                  # [bb,bg]
+        # ---- mod-4 spill tracking (fractured-LUT reference) ------------
+        x4 = (xk & 3)[:, None]                                        # [bb,1]
+        new_spills = []
+        for i in range(1, n + 1):
+            prev = (word >> (i * lane)) & 3
+            obs = (word2 >> (i * lane)) & 3
+            if i < n:
+                p4 = (_lsb2(d_word, sign_bits, i, lane, w_a)[None, :]
+                      * x4) & 3
+            else:
+                p4 = 0                    # virtual observer lane
+            mm = (obs - prev - p4) & 3
+            delta = jnp.where(mm == 3, -1, mm)
+            new_spills.append(spills[..., i - 1] + delta)
+        spills = jnp.stack(new_spills, axis=-1)                       # [bb,bg,n]
+        return word2, spills
+
+    word, spills = jax.lax.fori_loop(
+        0, bk, step, (word_ref[...], spill_ref[...]))
+    word_ref[...] = word
+    spill_ref[...] = spills
+
+    @pl.when(k_step == nsteps_k - 1)
+    def _extract():
+        # Eq. 3:  R̂_i = (2^L S_i + R_i) - S_{i-1}
+        mask = (1 << lane) - 1
+        outs = []
+        for i in range(n):
+            field = (word >> (i * lane)) & mask
+            s_i = spills[..., i]
+            s_prev = spills[..., i - 1] if i > 0 else 0
+            outs.append((s_i << lane) + field - s_prev)
+        o_ref[...] = jnp.stack(outs, axis=-1)                         # [bb,bg,n]
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "bb", "bg", "bk",
+                                             "interpret"))
+def sdv_matvec(x_t: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
+               bb: int = 8, bg: int = 128, bk: int = 512,
+               interpret: bool = True) -> jnp.ndarray:
+    """Packed GEMV.
+
+    Args:
+      x_t: [K, B] int8 activations (K-major), values within w_b bits.
+      w_words: [K, G] int32 storage words (from ``prepare_sdv_weights``).
+      plan: SDV lane plan on the INT32 datapath.
+
+    Returns:
+      [B, G, n] int32 — exact per-lane dot products (dequantize outside).
+    """
+    k, b = x_t.shape
+    _, g = w_words.shape
+    n, lane = plan.n, plan.lane
+    sign_shift = plan.packed_width
+    assert sign_shift + n <= 32, "no room to park sign bits"
+    bb = min(bb, b)
+    bg = min(bg, g)
+    bk = min(bk, k)
+    assert k % bk == 0, (k, bk)
+    grid = (pl.cdiv(b, bb), pl.cdiv(g, bg), k // bk)
+    return pl.pallas_call(
+        functools.partial(_body, n, lane, plan.w_a, sign_shift, k // bk, bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bb), lambda ib, ig, ik: (ik, ib)),
+            pl.BlockSpec((bk, bg), lambda ib, ig, ik: (ik, ig)),
+        ],
+        out_specs=pl.BlockSpec((bb, bg, n), lambda ib, ig, ik: (ib, ig, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, g, n), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((bb, bg), jnp.int32),
+            pltpu.VMEM((bb, bg, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x_t, w_words)

@@ -1,0 +1,66 @@
+"""Serving launcher: quantized lane-packed weights, batched decode with
+the int8 KV cache — the deployment form of the paper's technique.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--weight-bits", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_arch
+    from repro.models import (decode_step, init_cache, init_params,
+                              serve_params, values, Rules)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    rules = Rules(tp=None, fsdp=None, ep=None, batch=())
+    params = values(init_params(cfg, rules, jax.random.PRNGKey(0)))
+    qparams = serve_params(params, bits=args.weight_bits, min_size=1024)
+
+    smax = args.prompt_len + args.new_tokens
+    cache = values(init_cache(cfg, rules, args.batch, smax))
+    kv_note = "int8" if "k_scale" in cache else "bf16"
+    print(f"{cfg.name}: packed W{args.weight_bits} weights, "
+          f"{kv_note} KV cache, batch {args.batch}")
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+        dtype=jnp.int32)
+    dec = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    tok = prompts[:, :1]
+    t0 = time.perf_counter()
+    gen = []
+    for i in range(smax - 1):
+        logits, cache = dec(qparams, cache, tok)
+        if i + 1 < args.prompt_len:
+            tok = prompts[:, i + 1:i + 2]
+        else:
+            tok = jnp.argmax(logits[:, -1:, :cfg.vocab],
+                             axis=-1).astype(jnp.int32)
+            gen.append(np.asarray(tok)[:, 0])
+    dt = time.perf_counter() - t0
+    print(f"{args.batch * (smax - 1) / dt:.1f} tok/s "
+          f"(CPU, interpret-free jnp path)")
+    print("sample:", np.stack(gen, 1)[0][:12])
+
+
+if __name__ == "__main__":
+    main()

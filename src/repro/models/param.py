@@ -1,0 +1,119 @@
+"""Functional parameter system with sharding metadata.
+
+Every layer init builds a pytree whose leaves are ``P(value, spec)``:
+``value`` is either a real array (training) or a ShapeDtypeStruct
+(abstract init for the multi-pod dry-run — no allocation), ``spec`` is
+the PartitionSpec on the production mesh.
+
+Logical axes used by the layers:
+  "tp"    tensor-parallel dimension        -> mesh "model"
+  "fsdp"  ZeRO-3 parameter shard dimension -> mesh "data" (large archs)
+  "ep"    expert-parallel dimension        -> mesh "model"
+Resolution happens at init time through ``Rules``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+
+@dataclasses.dataclass
+class P:
+    value: Any
+    spec: PartitionSpec
+
+
+jax.tree_util.register_dataclass(P, data_fields=["value"],
+                                 meta_fields=["spec"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Logical -> physical axis mapping for one launch configuration."""
+    tp: Optional[str] = "model"
+    fsdp: Optional[str] = None           # "data" enables ZeRO-3 sharding
+    ep: Optional[str] = "model"
+    batch: Sequence[str] = ("data",)     # ("pod", "data") on multi-pod
+    tp_degree: int = 1                   # mesh size along the tp axis
+    batch_degree: int = 1                # product of batch-axis sizes
+
+    def resolve(self, axes: Sequence[Optional[str]]) -> PartitionSpec:
+        out = []
+        for a in axes:
+            if a is None:
+                out.append(None)
+            elif a == "tp":
+                out.append(self.tp)
+            elif a == "fsdp":
+                out.append(self.fsdp)
+            elif a == "ep":
+                out.append(self.ep)
+            elif a == "batch":
+                out.append(tuple(self.batch) if self.batch else None)
+            else:
+                raise ValueError(f"unknown logical axis {a}")
+        return PartitionSpec(*out)
+
+    def batch_spec(self, *trailing: Optional[str]) -> PartitionSpec:
+        return PartitionSpec(tuple(self.batch), *trailing)
+
+
+class Init:
+    """Parameter factory.  ``key=None`` -> abstract (ShapeDtypeStruct)."""
+
+    def __init__(self, key: Optional[jax.Array], rules: Rules, dtype):
+        self.key = key
+        self.rules = rules
+        self.dtype = dtype
+        self._n = 0
+
+    def _next_key(self):
+        self._n += 1
+        return jax.random.fold_in(self.key, self._n)
+
+    def normal(self, shape, axes, *, std: float = 0.02, dtype=None) -> P:
+        dtype = dtype or self.dtype
+        spec = self.rules.resolve(axes)
+        if self.key is None:
+            return P(jax.ShapeDtypeStruct(shape, dtype), spec)
+        v = (jax.random.normal(self._next_key(), shape, jnp.float32)
+             * std).astype(dtype)
+        return P(v, spec)
+
+    def zeros(self, shape, axes, *, dtype=None) -> P:
+        dtype = dtype or self.dtype
+        spec = self.rules.resolve(axes)
+        if self.key is None:
+            return P(jax.ShapeDtypeStruct(shape, dtype), spec)
+        return P(jnp.zeros(shape, dtype), spec)
+
+    def ones(self, shape, axes, *, dtype=None) -> P:
+        dtype = dtype or self.dtype
+        spec = self.rules.resolve(axes)
+        if self.key is None:
+            return P(jax.ShapeDtypeStruct(shape, dtype), spec)
+        return P(jnp.ones(shape, dtype), spec)
+
+    def const(self, value, axes) -> P:
+        spec = self.rules.resolve(axes)
+        if self.key is None:
+            return P(jax.ShapeDtypeStruct(value.shape, value.dtype), spec)
+        return P(value, spec)
+
+
+def is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def values(tree):
+    """P tree -> value tree."""
+    return jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_p)
+
+
+def specs(tree):
+    """P tree -> PartitionSpec tree."""
+    return jax.tree_util.tree_map(lambda p: p.spec, tree, is_leaf=is_p)

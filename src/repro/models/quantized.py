@@ -1,0 +1,169 @@
+"""Quantized, lane-packed serving parameters (``packed_memory`` mode).
+
+``serve_params`` rewrites a trained parameter tree: every large
+projection kernel becomes a ``PackedLinear`` — w-bit symmetric
+per-output-channel quantization, 32/w values per int32 lane word in HBM.
+The layer library transparently dispatches on the container type, so
+``decode_step``/``forward`` run unchanged with 16/w x less weight
+traffic — the paper's packing applied to the TPU memory roofline.
+
+The arithmetic-packing execution (`packed_compute`) lives in
+kernels/sdv_matvec and kernels/bseg_conv1d and is exercised by the
+examples and benchmarks; see DESIGN.md §2 for when each mode wins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class PackedLinear:
+    """Lane-packed quantized kernel: words [..., d_in, d_out/per] int32,
+    scale [..., 1, d_out_pad] f32; ``d_out`` unpads on materialize."""
+    words: jnp.ndarray
+    scale: jnp.ndarray
+    bits: int
+    d_out: int
+
+
+jax.tree_util.register_dataclass(PackedLinear, data_fields=["words", "scale"],
+                                 meta_fields=["bits", "d_out"])
+
+
+def pack_linear(kernel: jnp.ndarray, bits: int) -> PackedLinear:
+    """kernel [..., d_in, d_out] float -> PackedLinear."""
+    per = 32 // bits
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(kernel.astype(jnp.float32)), axis=-2,
+                   keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(kernel.astype(jnp.float32) / scale),
+                 -qmax, qmax).astype(jnp.int32)
+    d_out = kernel.shape[-1]
+    pad = (-d_out) % per
+    if pad:
+        q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+        scale = jnp.pad(scale, [(0, 0)] * (scale.ndim - 1) + [(0, pad)],
+                        constant_values=1.0)
+    nw = (d_out + pad) // per
+    words = jnp.zeros(q.shape[:-1] + (nw,), jnp.int32)
+    for i in range(per):
+        field = q[..., i::per] & ((1 << bits) - 1)
+        words = words | (field << (i * bits))
+    return PackedLinear(words=words, scale=scale.astype(jnp.float32),
+                        bits=bits, d_out=d_out)
+
+
+def materialize(pl: PackedLinear, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Unpack + dequantize -> [..., d_in, d_out] in ``dtype``."""
+    per = 32 // pl.bits
+    w, mask = pl.bits, (1 << pl.bits) - 1
+    cols = []
+    for i in range(per):
+        f = (pl.words >> (i * w)) & mask
+        f = jnp.where(f >= (1 << (w - 1)), f - (1 << w), f)
+        cols.append(f)
+    q = jnp.stack(cols, axis=-1)                 # [..., d_in, nw, per]
+    full = q.reshape(q.shape[:-2] + (q.shape[-2] * per,))
+    deq = full.astype(jnp.float32) * pl.scale
+    return deq[..., :pl.d_out].astype(dtype)
+
+
+def is_packed(x) -> bool:
+    return isinstance(x, PackedLinear)
+
+
+_QUANT_LEAF_NAMES = ("kernel", "wi_gate", "wi_up", "wo")
+_SKIP_CONTAINERS = ("router", "conv", "proj_patches")
+
+
+def serve_params(params: Any, bits: int = 4,
+                 min_size: int = 1 << 16) -> Any:
+    """Rewrite a parameter *value* tree for quantized packed serving."""
+
+    def walk(tree, name):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if k in _SKIP_CONTAINERS:
+                    out[k] = v
+                elif isinstance(v, dict):
+                    out[k] = walk(v, k)
+                elif k in _QUANT_LEAF_NAMES and hasattr(v, "ndim") \
+                        and v.ndim >= 2 and v.size >= min_size:
+                    out[k] = pack_linear(v, bits)
+                else:
+                    out[k] = v
+            return out
+        return tree
+
+    out = walk(params, "")
+    # the LM head is a plain array leaf at top level
+    if isinstance(out, dict) and "lm_head" in out \
+            and not is_packed(out["lm_head"]):
+        out["lm_head"] = pack_linear(out["lm_head"], bits)
+    return out
+
+
+def serve_param_specs(shapes: Any, specs: Any, bits: int = 4,
+                      min_size: int = 1 << 16) -> Any:
+    """Mirror of ``serve_params`` over (ShapeDtypeStruct tree, spec
+    tree): produces the PartitionSpec tree for the quantized layout.
+
+    PackedLinear leaves keep the kernel's spec on ``words`` (dim names
+    unchanged, minor dim shrinks by 32/bits — still TP-divisible thanks
+    to 128-multiple output dims) and drop the reduced (second-to-last)
+    axis from the ``scale`` spec.
+    """
+    from jax.sharding import PartitionSpec
+
+    def scale_spec(spec, ndim):
+        axes = list(spec) + [None] * (ndim - len(spec))
+        axes[-2] = None
+        return PartitionSpec(*axes)
+
+    def quantized_leaf(shape_leaf, spec_leaf):
+        per = 32 // bits
+        d_out = shape_leaf.shape[-1]
+        pad = (-d_out) % per
+        nw = (d_out + pad) // per
+        words = jax.ShapeDtypeStruct(shape_leaf.shape[:-1] + (nw,),
+                                     jnp.int32)
+        del words  # shape only needed for documentation
+        return PackedLinear(words=spec_leaf,
+                            scale=scale_spec(spec_leaf, shape_leaf.ndim),
+                            bits=bits, d_out=d_out)
+
+    def walk(sh, sp):
+        if isinstance(sh, dict):
+            out = {}
+            for k in sh:
+                if k in _SKIP_CONTAINERS:
+                    out[k] = sp[k]
+                elif isinstance(sh[k], dict):
+                    out[k] = walk(sh[k], sp[k])
+                elif k in _QUANT_LEAF_NAMES and hasattr(sh[k], "ndim") \
+                        and sh[k].ndim >= 2 \
+                        and int(np_prod(sh[k].shape)) >= min_size:
+                    out[k] = quantized_leaf(sh[k], sp[k])
+                else:
+                    out[k] = sp[k]
+            return out
+        return sp
+
+    out = walk(shapes, specs)
+    if isinstance(out, dict) and "lm_head" in out \
+            and not isinstance(out["lm_head"], PackedLinear):
+        out["lm_head"] = quantized_leaf(shapes["lm_head"], specs["lm_head"])
+    return out
+
+
+def np_prod(shape) -> int:
+    r = 1
+    for s in shape:
+        r *= int(s)
+    return r

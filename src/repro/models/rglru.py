@@ -1,0 +1,76 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill/training uses an associative scan (parallel over sequence);
+decode carries ``h`` as O(1) state — which is what makes the
+``long_500k`` decode shape tractable for this hybrid architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .param import Init
+from .layers import dense_init, dense_apply
+from .ssm import short_conv_init, short_conv_apply
+
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int
+    d_conv: int = 4
+
+
+def rglru_init(ini: Init, cfg: RGLRUConfig):
+    d, dr = cfg.d_model, cfg.d_rnn
+    return {
+        "in_x": dense_init(ini, d, dr, ("fsdp", "tp")),
+        "in_gate": dense_init(ini, d, dr, ("fsdp", "tp")),
+        "conv": short_conv_init(ini, dr, cfg.d_conv),
+        "w_a": dense_init(ini, dr, dr, ("tp", None), std=1.0 / math.sqrt(dr)),
+        "w_x": dense_init(ini, dr, dr, ("tp", None), std=1.0 / math.sqrt(dr)),
+        "lam": ini.const(jnp.full((dr,), 2.0, jnp.float32), (None,)),
+        "out": dense_init(ini, dr, d, ("tp", "fsdp")),
+    }
+
+
+def _rglru_core(params, u, h0: Optional[jnp.ndarray]):
+    """u [B, S, dr] -> (y [B, S, dr], h_last [B, dr]) via assoc. scan."""
+    r = jax.nn.sigmoid(dense_apply(params["w_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(params["w_x"], u).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * u.astype(jnp.float32)
+    if h0 is not None:
+        gated = gated.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(u.dtype), h[:, -1, :]
+
+
+def rglru_apply(params, cfg: RGLRUConfig, x, *, conv_state=None,
+                rnn_state=None):
+    """Griffin recurrent block: gate branch * (conv -> RG-LRU) branch.
+
+    x [B, S, d_model] -> (y, (conv_state, rnn_state))."""
+    gate = jax.nn.gelu(dense_apply(params["in_gate"], x), approximate=True)
+    u = dense_apply(params["in_x"], x)
+    u, conv_state = short_conv_apply(params["conv"], u, state=conv_state)
+    y, rnn_state = _rglru_core(params, u, rnn_state)
+    return dense_apply(params["out"], y * gate), (conv_state, rnn_state)

@@ -1,0 +1,45 @@
+"""Activation-sharding context.
+
+Launchers (dryrun/train/serve) install the active ``Rules``; layers call
+``constrain(x, ...logical axes...)`` at the standard cut points.  With
+no rules installed (unit tests, single device) it is a no-op, so model
+code never depends on a mesh being present.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec
+
+from .param import Rules
+
+_ACTIVE: list = [None]
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    _ACTIVE.append(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def active_rules() -> Optional[Rules]:
+    return _ACTIVE[-1]
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint on logical axes (no-op without rules)."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = rules.resolve(axes)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def tp_size() -> int:
+    r = active_rules()
+    return getattr(r, "tp_degree", 1) if r is not None else 1

@@ -1,0 +1,707 @@
+"""Model assembly for all assigned architecture families.
+
+Families: dense / moe / vlm (decoder LM), encdec (encoder-decoder),
+hybrid (RG-LRU + local attention, Griffin 1:2 pattern), ssm (Mamba2).
+
+Layers are stacked and driven by ``lax.scan`` (MaxText-style) so the
+64-layer dry-runs stay compact in HLO; remat wraps each block.  Caches
+are pytrees with one stacked leading layer axis so decode also scans.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .param import Init, Rules
+from . import shard_ctx
+from . import layers as L
+from . import ssm as S
+from . import rglru as R
+
+
+# ---------------------------------------------------------------------------
+# stacked init (scan-over-layers parameter layout)
+# ---------------------------------------------------------------------------
+
+class StackedInit(Init):
+    """Prepends a layer axis to every parameter."""
+
+    def __init__(self, base: Init, n: int):
+        self.base = base
+        self.n = n
+
+    def normal(self, shape, axes, **kw):
+        return self.base.normal((self.n,) + tuple(shape),
+                                (None,) + tuple(axes), **kw)
+
+    def zeros(self, shape, axes, **kw):
+        return self.base.zeros((self.n,) + tuple(shape),
+                               (None,) + tuple(axes), **kw)
+
+    def ones(self, shape, axes, **kw):
+        return self.base.ones((self.n,) + tuple(shape),
+                              (None,) + tuple(axes), **kw)
+
+    def const(self, value, axes):
+        tiled = jnp.broadcast_to(value, (self.n,) + value.shape)
+        return self.base.const(tiled, (None,) + tuple(axes))
+
+
+def _attn_cfg(cfg: ArchConfig, *, window=None, use_rope=True) -> L.AttnConfig:
+    return L.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.hd, qkv_bias=cfg.qkv_bias, rope_theta=cfg.rope_theta,
+        window=window, use_rope=use_rope,
+        free_qkv_sharding=cfg.free_qkv_sharding)
+
+
+def _moe_cfg(cfg: ArchConfig) -> L.MoEConfig:
+    return L.MoEConfig(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                       n_experts=cfg.n_experts, top_k=cfg.top_k,
+                       shared_expert=cfg.shared_expert, act=cfg.act)
+
+
+def _ssm_cfg(cfg: ArchConfig) -> S.SSMConfig:
+    return S.SSMConfig(d_model=cfg.d_model, d_inner=cfg.d_inner,
+                       n_heads=cfg.ssm_heads, d_state=cfg.ssm_state,
+                       n_groups=cfg.ssm_groups)
+
+
+def _rg_cfg(cfg: ArchConfig) -> R.RGLRUConfig:
+    return R.RGLRUConfig(d_model=cfg.d_model, d_rnn=cfg.d_rnn)
+
+
+# ---------------------------------------------------------------------------
+# block inits
+# ---------------------------------------------------------------------------
+
+def _decoder_block_init(ini: Init, cfg: ArchConfig, *, cross: bool = False):
+    p = {
+        "ln_attn": L.rmsnorm_init(ini, cfg.d_model),
+        "attn": L.attention_init(ini, _attn_cfg(cfg)),
+        "ln_mlp": L.rmsnorm_init(ini, cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = L.moe_init(ini, _moe_cfg(cfg))
+    else:
+        p["mlp"] = L.mlp_init(ini, cfg.d_model, cfg.d_ff)
+    if cross:
+        p["ln_cross"] = L.rmsnorm_init(ini, cfg.d_model)
+        p["cross"] = L.attention_init(ini, _attn_cfg(cfg, use_rope=False))
+    return p
+
+
+def _hybrid_group_init(ini: Init, cfg: ArchConfig):
+    """One Griffin pattern group: rec, rec, local-attn (each + MLP)."""
+    def one_rec():
+        return {
+            "ln_mix": L.rmsnorm_init(ini, cfg.d_model),
+            "rec": R.rglru_init(ini, _rg_cfg(cfg)),
+            "ln_mlp": L.rmsnorm_init(ini, cfg.d_model),
+            "mlp": L.mlp_init(ini, cfg.d_model, cfg.d_ff),
+        }
+    return {
+        "rec0": one_rec(),
+        "rec1": one_rec(),
+        "ln_attn": L.rmsnorm_init(ini, cfg.d_model),
+        "attn": L.attention_init(ini, _attn_cfg(cfg, window=cfg.window)),
+        "ln_mlp": L.rmsnorm_init(ini, cfg.d_model),
+        "mlp": L.mlp_init(ini, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _ssm_block_init(ini: Init, cfg: ArchConfig):
+    return {
+        "ln": L.rmsnorm_init(ini, cfg.d_model),
+        "ssm": S.ssm_init(ini, _ssm_cfg(cfg)),
+    }
+
+
+def init_params(cfg: ArchConfig, rules: Rules,
+                key: Optional[jax.Array]) -> Dict[str, Any]:
+    """Build the full parameter P-tree (abstract when key is None)."""
+    ini = Init(key, rules, cfg.dtype)
+    p: Dict[str, Any] = {
+        "embed": ini.normal((cfg.vocab_padded, cfg.d_model),
+                            ("tp", "fsdp"), std=0.02),
+        "ln_f": L.rmsnorm_init(ini, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ini.normal((cfg.d_model, cfg.vocab_padded),
+                                  ("fsdp", "tp"), std=0.02)
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.family == "moe" and cfg.moe_every > 1:
+            # homogeneous scan over (moe block + dense blocks) groups
+            import dataclasses as _dc
+            n_groups = cfg.n_layers // cfg.moe_every
+            sini = StackedInit(ini, n_groups)
+            p["blocks"] = _decoder_block_init(sini, cfg)
+            dense_cfg = _dc.replace(cfg, family="dense")
+            for i in range(1, cfg.moe_every):
+                p[f"blocks_dense{i}"] = _decoder_block_init(sini, dense_cfg)
+        else:
+            sini = StackedInit(ini, cfg.n_layers)
+            p["blocks"] = _decoder_block_init(sini, cfg)
+    elif cfg.family == "ssm":
+        sini = StackedInit(ini, cfg.n_layers)
+        p["blocks"] = _ssm_block_init(sini, cfg)
+    elif cfg.family == "hybrid":
+        n_groups = cfg.n_layers // 3
+        n_tail = cfg.n_layers - 3 * n_groups      # trailing rec layers
+        sini = StackedInit(ini, n_groups)
+        p["groups"] = _hybrid_group_init(sini, cfg)
+        if n_tail:
+            tini = StackedInit(ini, n_tail)
+            p["tail"] = {
+                "ln_mix": L.rmsnorm_init(tini, cfg.d_model),
+                "rec": R.rglru_init(tini, _rg_cfg(cfg)),
+                "ln_mlp": L.rmsnorm_init(tini, cfg.d_model),
+                "mlp": L.mlp_init(tini, cfg.d_model, cfg.d_ff),
+            }
+    elif cfg.family == "encdec":
+        eini = StackedInit(ini, cfg.n_enc_layers)
+        dini = StackedInit(ini, cfg.n_dec_layers)
+        p["enc_blocks"] = _decoder_block_init(eini, cfg)
+        p["dec_blocks"] = _decoder_block_init(dini, cfg, cross=True)
+        p["ln_enc"] = L.rmsnorm_init(ini, cfg.d_model)
+    else:
+        raise ValueError(cfg.family)
+    if cfg.frontend == "vision":
+        p["proj_patches"] = L.dense_init(ini, cfg.d_model, cfg.d_model,
+                                         (None, None))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# block applies
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _layer_loop(cfg: ArchConfig, body, x, stacked, n: int,
+                allow_group: bool = False):
+    """lax.scan over stacked layer params, or an unrolled python loop
+    (cfg.scan_layers=False) so cost_analysis sees every layer's FLOPs —
+    XLA's cost model counts while-loop bodies exactly once.
+
+    cfg.remat_group > 1 enables sqrt-L checkpointing: an outer scan over
+    layer *groups* whose bodies are rematerialized wholesale, so only
+    n/group layer-boundary activations are saved instead of n (§Perf
+    iteration for the memory roofline term)."""
+    g = cfg.remat_group
+    if allow_group and cfg.scan_layers and g > 1 and n % g == 0 and n > g:
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((n // g, g) + a.shape[1:]), stacked)
+
+        def outer(xc, sl):
+            def run_group(xx):
+                return jax.lax.scan(body, xx, sl)[0]
+            return jax.checkpoint(run_group)(xc), None
+
+        x, _ = jax.lax.scan(outer, x, grouped)
+        return x, None
+    if cfg.scan_layers:
+        x, ys = jax.lax.scan(body, x, stacked)
+        return x, ys
+    ys = []
+    for i in range(n):
+        sl = jax.tree_util.tree_map(lambda a: a[i], stacked)
+        x, y = body(x, sl)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return x, None
+    return x, jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+
+
+def _decoder_block_apply(bp, cfg: ArchConfig, x, positions, *,
+                         cross_kv=None, causal=True, diff=True):
+    acfg = _attn_cfg(cfg, window=cfg.window if cfg.family == "dense"
+                     else None)
+    h, _ = L.attention_apply(bp["attn"], acfg,
+                             L.rmsnorm_apply(bp["ln_attn"], x),
+                             positions=positions, causal=causal,
+                             chunk=cfg.attn_chunk, differentiable=diff)
+    x = x + h
+    if cross_kv is not None:
+        ccfg = _attn_cfg(cfg, use_rope=False)
+        h, _ = L.attention_apply(bp["cross"], ccfg,
+                                 L.rmsnorm_apply(bp["ln_cross"], x),
+                                 positions=positions, kv=cross_kv,
+                                 causal=False, chunk=cfg.attn_chunk,
+                                 differentiable=diff)
+        x = x + h
+    y = L.rmsnorm_apply(bp["ln_mlp"], x)
+    if cfg.family == "moe":
+        x = x + L.moe_apply(bp["moe"], _moe_cfg(cfg), y)
+    else:
+        x = x + L.mlp_apply(bp["mlp"], y, act=cfg.act)
+    return x
+
+
+def _rec_layer_apply(rp, cfg: ArchConfig, x, *, conv_state=None,
+                     rnn_state=None):
+    h, states = R.rglru_apply(rp["rec"], _rg_cfg(cfg),
+                              L.rmsnorm_apply(rp["ln_mix"], x),
+                              conv_state=conv_state, rnn_state=rnn_state)
+    x = x + h
+    x = x + L.mlp_apply(rp["mlp"], L.rmsnorm_apply(rp["ln_mlp"], x),
+                        act=cfg.act)
+    return x, states
+
+
+def _hybrid_group_apply(gp, cfg: ArchConfig, x, positions, *, states=None,
+                        diff=True):
+    st = states or {}
+    x, s0 = _rec_layer_apply(gp["rec0"], cfg, x,
+                             conv_state=st.get("conv0"),
+                             rnn_state=st.get("rnn0"))
+    x, s1 = _rec_layer_apply(gp["rec1"], cfg, x,
+                             conv_state=st.get("conv1"),
+                             rnn_state=st.get("rnn1"))
+    acfg = _attn_cfg(cfg, window=cfg.window)
+    h, _ = L.attention_apply(gp["attn"], acfg,
+                             L.rmsnorm_apply(gp["ln_attn"], x),
+                             positions=positions, causal=True,
+                             chunk=cfg.attn_chunk, differentiable=diff)
+    x = x + h
+    x = x + L.mlp_apply(gp["mlp"], L.rmsnorm_apply(gp["ln_mlp"], x),
+                        act=cfg.act)
+    new_states = {"conv0": s0[0], "rnn0": s0[1],
+                  "conv1": s1[0], "rnn1": s1[1]}
+    return x, new_states
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ArchConfig, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.act == "geglu":                 # gemma family scales embeddings
+        x = x * math.sqrt(cfg.d_model)
+    return shard_ctx.constrain(x.astype(cfg.dtype), "batch", None, None)
+
+
+def _finish(cfg: ArchConfig, params, x, mode: str):
+    if mode == "hidden":
+        return L.rmsnorm_apply(params["ln_f"], x)
+    if mode == "last_logits":
+        return _unembed(cfg, params, x[:, -1:, :])
+    return _unembed(cfg, params, x)
+
+
+def unembed_hidden(cfg: ArchConfig, params, h):
+    """Project already-normed hidden states to logits (chunked loss)."""
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].astype(h.dtype).T
+    else:
+        logits = h @ L.mat(params["lm_head"], h.dtype)
+    return shard_ctx.constrain(logits.astype(jnp.float32),
+                               "batch", None, "tp")
+
+
+def _unembed(cfg: ArchConfig, params, x):
+    x = L.rmsnorm_apply(params["ln_f"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(x.dtype).T
+    else:
+        logits = x @ L.mat(params["lm_head"], x.dtype)
+    return shard_ctx.constrain(logits.astype(jnp.float32),
+                               "batch", None, "tp")
+
+
+def forward(cfg: ArchConfig, params, batch: Dict[str, jnp.ndarray],
+            *, collect_kv: bool = False, diff: bool = True,
+            mode: str = "logits"):
+    """mode: "logits" (full [B,S,V]), "hidden" (post-ln_f states, for
+    the memory-safe chunked loss), "last_logits" (serving prefill —
+    only the next-token logits are ever needed)."""
+    """Full-sequence forward.  batch:
+      dense/moe/ssm/hybrid: {"tokens": [B, S]}
+      vlm:    {"tokens": [B, S - n_patches], "patches": [B, n_patches, d]}
+      encdec: {"src": [B, S_src, d], "tokens": [B, S_tgt]}
+    Returns logits [B, S_out, vocab] (and optionally stacked kv).
+    """
+    if cfg.family == "encdec":
+        return _forward_encdec(cfg, params, batch, collect_kv=collect_kv,
+                               diff=diff, mode=mode)
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+    if cfg.family == "vlm":
+        patches = L.dense_apply(params["proj_patches"],
+                                batch["patches"].astype(cfg.dtype))
+        x = jnp.concatenate([patches, x], axis=1)
+    b, s_tot, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s_tot, dtype=jnp.int32),
+                                 (b, s_tot))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        me = cfg.moe_every if cfg.family == "moe" else 1
+        if me > 1:
+            import dataclasses as _dc
+            dense_cfg = _dc.replace(cfg, family="dense")
+            n_groups = cfg.n_layers // me
+
+            def body(xc, bps):
+                def blk(xx):
+                    xx = _decoder_block_apply(bps[0], cfg, xx, positions,
+                                              diff=diff)
+                    for i in range(1, me):
+                        xx = _decoder_block_apply(bps[i], dense_cfg, xx,
+                                                  positions, diff=diff)
+                    return xx
+                return _maybe_remat(blk, cfg)(xc), None
+
+            xs = tuple([params["blocks"]]
+                       + [params[f"blocks_dense{i}"] for i in range(1, me)])
+            x, _ = _layer_loop(cfg, body, x, xs, n_groups,
+                               allow_group=True)
+        else:
+            def body(xc, bp):
+                return _maybe_remat(
+                    lambda xx: _decoder_block_apply(bp, cfg, xx, positions,
+                                                    diff=diff),
+                    cfg)(xc), None
+            x, _ = _layer_loop(cfg, body, x, params["blocks"], cfg.n_layers,
+                           allow_group=True)
+    elif cfg.family == "ssm":
+        def body(xc, bp):
+            def blk(xx):
+                h, _ = S.ssm_apply(bp["ssm"], _ssm_cfg(cfg),
+                                   L.rmsnorm_apply(bp["ln"], xx))
+                return xx + h
+            return _maybe_remat(blk, cfg)(xc), None
+        x, _ = _layer_loop(cfg, body, x, params["blocks"], cfg.n_layers,
+                           allow_group=True)
+    elif cfg.family == "hybrid":
+        def body(xc, gp):
+            def blk(xx):
+                y, _ = _hybrid_group_apply(gp, cfg, xx, positions,
+                                           diff=diff)
+                return y
+            return _maybe_remat(blk, cfg)(xc), None
+        x, _ = _layer_loop(cfg, body, x, params["groups"],
+                           cfg.n_layers // 3, allow_group=True)
+        if "tail" in params:
+            def tbody(xc, tp):
+                def blk(xx):
+                    y, _ = _rec_layer_apply(tp, cfg, xx)
+                    return y
+                return _maybe_remat(blk, cfg)(xc), None
+            x, _ = _layer_loop(cfg, tbody, x, params["tail"],
+                               cfg.n_layers - 3 * (cfg.n_layers // 3))
+    else:
+        raise ValueError(cfg.family)
+    return _finish(cfg, params, x, mode)
+
+
+def _forward_encdec(cfg: ArchConfig, params, batch, *, collect_kv=False,
+                    diff=True, mode: str = "logits"):
+    src = batch["src"].astype(cfg.dtype)      # precomputed frame embeds
+    b = src.shape[0]
+    pos_src = jnp.broadcast_to(
+        jnp.arange(src.shape[1], dtype=jnp.int32), (b, src.shape[1]))
+
+    def enc_body(xc, bp):
+        return _maybe_remat(
+            lambda xx: _decoder_block_apply(bp, cfg, xx, pos_src,
+                                            causal=False, diff=diff),
+            cfg)(xc), None
+    enc, _ = _layer_loop(cfg, enc_body, src, params["enc_blocks"],
+                         cfg.n_enc_layers, allow_group=True)
+    enc = L.rmsnorm_apply(params["ln_enc"], enc)
+
+    x = _embed(cfg, params, batch["tokens"])
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                           (b, x.shape[1]))
+
+    def dec_body(xc, bp):
+        return _maybe_remat(
+            lambda xx: _decoder_block_apply(bp, cfg, xx, pos,
+                                            cross_kv=(enc, enc), diff=diff),
+            cfg)(xc), None
+    x, _ = _layer_loop(cfg, dec_body, x, params["dec_blocks"],
+                       cfg.n_dec_layers, allow_group=True)
+    return _finish(cfg, params, x, mode)
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, rules: Rules, batch_size: int, s_max: int,
+               *, abstract: bool = False):
+    """Build the decode cache P-tree (stacked layer axis first).
+
+    The TP axis lands on whichever KV-cache dim it divides: the KV-head
+    dim when n_kv is a TP multiple, else the head_dim (smaller GQA/MQA
+    archs) — so a 16-wide model axis always shards the 32k caches."""
+    ini = Init(None if abstract else jax.random.PRNGKey(0), rules, cfg.dtype)
+    b = batch_size
+    hd, kv = cfg.hd, cfg.n_kv
+    tp = max(1, rules.tp_degree)
+    kv_ax = ("tp", None) if kv and kv % tp == 0 else         ((None, "tp") if hd and hd % tp == 0 else (None, None))
+
+    kv8 = cfg.serve_kv_bits == 8 and cfg.family in ("dense", "moe", "vlm")
+    kv_dtype = jnp.int8 if kv8 else cfg.dtype
+
+    def kvc(n_layers, s):
+        out = {
+            "k": ini.zeros((n_layers, b, s, kv, hd),
+                           (None, "batch", None) + kv_ax, dtype=kv_dtype),
+            "v": ini.zeros((n_layers, b, s, kv, hd),
+                           (None, "batch", None) + kv_ax, dtype=kv_dtype),
+        }
+        if kv8:
+            out["k_scale"] = ini.zeros(
+                (n_layers, b, s, kv), (None, "batch", None, kv_ax[0]),
+                dtype=jnp.float32)
+            out["v_scale"] = ini.zeros(
+                (n_layers, b, s, kv), (None, "batch", None, kv_ax[0]),
+                dtype=jnp.float32)
+        return out
+
+    cache: Dict[str, Any] = {"index": ini.zeros((), (), dtype=jnp.int32)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        cache.update(kvc(cfg.n_layers, s_max))
+    elif cfg.family == "encdec":
+        cache.update(kvc(cfg.n_dec_layers, s_max))
+        cache["cross_k"] = ini.zeros(
+            (cfg.n_dec_layers, b, s_max, kv, hd),
+            (None, "batch", None) + kv_ax)
+        cache["cross_v"] = ini.zeros(
+            (cfg.n_dec_layers, b, s_max, kv, hd),
+            (None, "batch", None) + kv_ax)
+    elif cfg.family == "ssm":
+        scfg = _ssm_cfg(cfg)
+        cache["conv"] = ini.zeros(
+            (cfg.n_layers, b, scfg.d_conv - 1, scfg.conv_channels),
+            (None, "batch", None, "tp"))
+        nh = scfg.n_heads
+        h_ax = ("tp", None, None) if nh % tp == 0 else (None, "tp", None)
+        cache["ssm"] = ini.zeros(
+            (cfg.n_layers, b, nh, scfg.d_state, scfg.head_dim),
+            (None, "batch") + h_ax, dtype=jnp.float32)
+    elif cfg.family == "hybrid":
+        n_groups = cfg.n_layers // 3
+        n_tail = cfg.n_layers - 3 * n_groups
+        w = min(cfg.window, s_max)
+        cache["k"] = ini.zeros((n_groups, b, w, kv, hd),
+                               (None, "batch", None) + kv_ax)
+        cache["v"] = ini.zeros((n_groups, b, w, kv, hd),
+                               (None, "batch", None) + kv_ax)
+        for pref, n in (("g", n_groups), ("t", n_tail)):
+            reps = 2 if pref == "g" else 1
+            for r in range(reps):
+                cache[f"{pref}_conv{r}"] = ini.zeros(
+                    (n, b, 3, cfg.d_rnn), (None, "batch", None, "tp"))
+                cache[f"{pref}_rnn{r}"] = ini.zeros(
+                    (n, b, cfg.d_rnn), (None, "batch", "tp"),
+                    dtype=jnp.float32)
+    return cache
+
+
+def _decode_attn_ring(bp, cfg: ArchConfig, x, k_cache, v_cache, index,
+                      *, window: int):
+    """Sliding-window decode with a ring buffer of size ``window``."""
+    acfg = _attn_cfg(cfg, window=window)
+    b = x.shape[0]
+    h, g, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    slot = jnp.mod(index, window)
+    pos = jnp.full((b, 1), index, jnp.int32)
+    q = L.dense_apply(bp["wq"], x).reshape(b, 1, h, hd)
+    k = L.dense_apply(bp["wk"], x).reshape(b, 1, g, hd)
+    v = L.dense_apply(bp["wv"], x).reshape(b, 1, g, hd)
+    q = L.rope(q, pos, theta=cfg.rope_theta)
+    k = L.rope(k, pos, theta=cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype),
+                                             slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype),
+                                             slot, axis=1)
+    # entry ages: slot s holds position index - ((slot - s) mod window)
+    offs = jnp.mod(slot - jnp.arange(window), window)
+    entry_pos = index - offs
+    valid = (entry_pos >= 0) & (entry_pos >= index - window + 1)
+    r = h // g
+    s = jnp.einsum("bgrd,bkgd->bgrk",
+                   q.reshape(b, g, r, hd).astype(jnp.float32),
+                   kc.astype(jnp.float32)) / math.sqrt(hd)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p, vc.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    return L.dense_apply(bp["wo"], out), kc, vc
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray):
+    """One decode step.  tokens [B, 1] int32; returns (logits, new cache).
+
+    The cache pytree layout matches ``init_cache`` (stacked layer axis);
+    the layer loop is a ``lax.scan`` carrying x and scanning cache
+    slices alongside parameters.
+    """
+    index = cache["index"]
+    x = _embed(cfg, params, tokens)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        acfg = _attn_cfg(cfg)
+        me = cfg.moe_every if cfg.family == "moe" else 1
+
+        kv8 = "k_scale" in cache
+
+        def one(bp, xc, kc, vc, moe: bool, ks=None, vs=None):
+            outs = L.decode_attention(
+                bp["attn"], acfg, L.rmsnorm_apply(bp["ln_attn"], xc),
+                cache_k=kc, cache_v=vc, cache_index=index,
+                cache_k_scale=ks, cache_v_scale=vs)
+            h, rest = outs[0], outs[1:]
+            y = xc + h
+            z = L.rmsnorm_apply(bp["ln_mlp"], y)
+            if moe:
+                y = y + L.moe_apply(bp["moe"], _moe_cfg(cfg), z)
+            else:
+                y = y + L.mlp_apply(bp["mlp"], z, act=cfg.act)
+            return (y,) + rest
+
+        if me > 1:
+            n_groups = cfg.n_layers // me
+            kg = cache["k"].reshape((n_groups, me) + cache["k"].shape[1:])
+            vg = cache["v"].reshape((n_groups, me) + cache["v"].shape[1:])
+
+            def body(xc, sl):
+                bps, kc, vc = sl[:-2], sl[-2], sl[-1]
+                nks, nvs = [], []
+                y = xc
+                for i in range(me):
+                    y, nk, nv = one(bps[i], y, kc[i], vc[i],
+                                    moe=(i == 0))[:3]
+                    nks.append(nk)
+                    nvs.append(nv)
+                return y, (jnp.stack(nks), jnp.stack(nvs))
+
+            xs = tuple([params["blocks"]]
+                       + [params[f"blocks_dense{i}"] for i in range(1, me)]
+                       + [kg, vg])
+            x, (nk, nv) = _layer_loop(cfg, body, x, xs, n_groups)
+            nk = nk.reshape(cache["k"].shape)
+            nv = nv.reshape(cache["v"].shape)
+            new_cache = dict(cache, k=nk, v=nv, index=index + 1)
+        elif kv8:
+            def body(xc, sl):
+                bp, kc, vc, ks, vs = sl
+                y, nk, nv, nks, nvs = one(bp, xc, kc, vc,
+                                          moe=(cfg.family == "moe"),
+                                          ks=ks, vs=vs)
+                return y, (nk, nv, nks, nvs)
+
+            x, (nk, nv, nks, nvs) = _layer_loop(
+                cfg, body, x, (params["blocks"], cache["k"], cache["v"],
+                               cache["k_scale"], cache["v_scale"]),
+                cfg.n_layers)
+            new_cache = dict(cache, k=nk, v=nv, k_scale=nks, v_scale=nvs,
+                             index=index + 1)
+        else:
+            def body(xc, sl):
+                bp, kc, vc = sl
+                y, nk, nv = one(bp, xc, kc, vc, moe=(cfg.family == "moe"))
+                return y, (nk, nv)
+
+            x, (nk, nv) = _layer_loop(
+                cfg, body, x, (params["blocks"], cache["k"], cache["v"]),
+                cfg.n_layers)
+            new_cache = dict(cache, k=nk, v=nv, index=index + 1)
+
+    elif cfg.family == "encdec":
+        acfg = _attn_cfg(cfg)
+        ccfg = _attn_cfg(cfg, use_rope=False)
+
+        def body(xc, sl):
+            bp, kc, vc, ck, cv = sl
+            h, nk, nv = L.decode_attention(
+                bp["attn"], acfg, L.rmsnorm_apply(bp["ln_attn"], xc),
+                cache_k=kc, cache_v=vc, cache_index=index)
+            y = xc + h
+            # cross attention against the precomputed encoder cache
+            b = y.shape[0]
+            g, r, hd = cfg.n_kv, cfg.n_heads // cfg.n_kv, cfg.hd
+            q = L.dense_apply(bp["cross"]["wq"],
+                              L.rmsnorm_apply(bp["ln_cross"], y))
+            q = q.reshape(b, g, r, hd).astype(jnp.float32)
+            s = jnp.einsum("bgrd,bkgd->bgrk", q,
+                           ck.astype(jnp.float32)) / math.sqrt(hd)
+            pr = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bgrk,bkgd->bgrd", pr, cv.astype(jnp.float32))
+            o = o.reshape(b, 1, cfg.n_heads * hd).astype(y.dtype)
+            y = y + L.dense_apply(bp["cross"]["wo"], o)
+            z = L.rmsnorm_apply(bp["ln_mlp"], y)
+            y = y + L.mlp_apply(bp["mlp"], z, act=cfg.act)
+            return y, (nk, nv)
+
+        x, (nk, nv) = _layer_loop(
+            cfg, body, x, (params["dec_blocks"], cache["k"],
+                           cache["v"], cache["cross_k"], cache["cross_v"]),
+            cfg.n_dec_layers)
+        new_cache = dict(cache, k=nk, v=nv, index=index + 1)
+
+    elif cfg.family == "ssm":
+        scfg = _ssm_cfg(cfg)
+
+        def body(xc, sl):
+            bp, conv, ssm_st = sl
+            h, (nconv, nssm) = S.ssm_apply(
+                bp["ssm"], scfg, L.rmsnorm_apply(bp["ln"], xc),
+                conv_state=conv, ssm_state=ssm_st, decode=True)
+            return xc + h, (nconv, nssm)
+
+        x, (nconv, nssm) = _layer_loop(
+            cfg, body, x, (params["blocks"], cache["conv"], cache["ssm"]),
+            cfg.n_layers)
+        new_cache = dict(cache, conv=nconv, ssm=nssm, index=index + 1)
+
+    elif cfg.family == "hybrid":
+        w = cache["k"].shape[2]
+
+        def body(xc, sl):
+            gp, kc, vc, c0, r0, c1, r1 = sl
+            y, s0 = _rec_layer_apply(gp["rec0"], cfg, xc,
+                                     conv_state=c0, rnn_state=r0)
+            y, s1 = _rec_layer_apply(gp["rec1"], cfg, y,
+                                     conv_state=c1, rnn_state=r1)
+            h, nk, nv = _decode_attn_ring(
+                gp["attn"], cfg, L.rmsnorm_apply(gp["ln_attn"], y),
+                kc, vc, index, window=w)
+            y = y + h
+            y = y + L.mlp_apply(gp["mlp"], L.rmsnorm_apply(gp["ln_mlp"], y),
+                                act=cfg.act)
+            return y, (nk, nv, s0[0], s0[1], s1[0], s1[1])
+
+        x, outs = _layer_loop(
+            cfg, body, x, (params["groups"], cache["k"], cache["v"],
+                           cache["g_conv0"], cache["g_rnn0"],
+                           cache["g_conv1"], cache["g_rnn1"]),
+            cfg.n_layers // 3)
+        new_cache = dict(cache, k=outs[0], v=outs[1],
+                         g_conv0=outs[2], g_rnn0=outs[3],
+                         g_conv1=outs[4], g_rnn1=outs[5],
+                         index=index + 1)
+        if "tail" in params:
+            def tbody(xc, sl):
+                tp, c0, r0 = sl
+                y, s0 = _rec_layer_apply(tp, cfg, xc,
+                                         conv_state=c0, rnn_state=r0)
+                return y, (s0[0], s0[1])
+            x, touts = _layer_loop(
+                cfg, tbody, x, (params["tail"], cache["t_conv0"],
+                                cache["t_rnn0"]),
+                cfg.n_layers - 3 * (cfg.n_layers // 3))
+            new_cache.update(t_conv0=touts[0], t_rnn0=touts[1])
+    else:
+        raise ValueError(cfg.family)
+
+    return _unembed(cfg, params, x), new_cache

@@ -1,0 +1,147 @@
+"""UltraNet-INT4 — the paper's evaluation model (Tabs. II-IV).
+
+DAC-SDC 2020 object-detection CNN: 8 conv3x3 stages (4 with 2x2 maxpool)
+plus a 1x1 head, quantized W4A4.  Two execution paths:
+
+  * ``mode="ref"``   — exact integer conv via im2col matmul (oracle);
+  * ``mode="bseg"``  — every conv is decomposed into 1-D rows and run
+    through the BSEG packed datapath (core/bseg.py), i.e. the paper's
+    Fig. 6/7 architecture end to end; bit-exact vs the oracle, while
+    consuming ``density`` x fewer wide multiplies.
+
+Thresholding (FINN-style) is modeled as requantize->unsigned-int4
+activations, which is exactly the signed-kernel x unsigned-input regime
+of Eqs. 9/10.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import INT32, plan_bseg, bseg_conv1d, bseg_num_multiplies
+
+# (out_channels, kernel, pool_after)
+ULTRANET_LAYERS: List[Tuple[int, int, bool]] = [
+    (16, 3, True), (32, 3, True), (64, 3, True), (64, 3, True),
+    (64, 3, False), (64, 3, False), (64, 3, False), (64, 3, False),
+]
+HEAD_CHANNELS = 36          # 6 anchors x (4 box + 1 obj + 1 cls)
+W_BITS = 4
+A_BITS = 4
+
+
+@dataclasses.dataclass
+class UltraNetParams:
+    convs: List[jnp.ndarray]        # int8 [C_out, C_in, k, k] (w4 values)
+    head: jnp.ndarray               # int8 [36, 64, 1, 1]
+
+
+def init_ultranet(seed: int = 0, in_ch: int = 3) -> UltraNetParams:
+    rng = np.random.default_rng(seed)
+    convs = []
+    cin = in_ch
+    for cout, k, _ in ULTRANET_LAYERS:
+        convs.append(jnp.asarray(
+            rng.integers(-8, 8, (cout, cin, k, k)), dtype=jnp.int8))
+        cin = cout
+    head = jnp.asarray(rng.integers(-8, 8, (HEAD_CHANNELS, cin, 1, 1)),
+                       dtype=jnp.int8)
+    return UltraNetParams(convs=convs, head=head)
+
+
+def _requant_unsigned(acc: jnp.ndarray, bits: int = A_BITS) -> jnp.ndarray:
+    """FINN-style thresholding stub: shift-requantize accumulator to an
+    unsigned ``bits``-wide activation."""
+    shifted = acc >> 6
+    return jnp.clip(shifted, 0, (1 << bits) - 1).astype(jnp.int32)
+
+
+def _conv2d_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x [B, H, W, C_in] int, w [C_out, C_in, k, k] -> same-pad conv."""
+    k = w.shape[-1]
+    pad = k // 2
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32).transpose(2, 3, 1, 0)     # HWIO
+    y = jax.lax.conv_general_dilated(
+        xf, wf, (1, 1), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jnp.round(y).astype(jnp.int32)
+
+
+def _conv2d_bseg(x: jnp.ndarray, w: jnp.ndarray, plan) -> jnp.ndarray:
+    """Same conv through the BSEG 1-D pipeline: a kxk conv is k row
+    convolutions summed (the paper's 'higher-dimensional convolutions
+    are sliced into individual 1D computations')."""
+    b, hh, ww, cin = x.shape
+    cout, _, kh, kw = w.shape
+    pad = kh // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    # rows: for each (kh row, cin): 1-D conv along W, then sum
+    # vectorize: batch dims = (B, H_out rows, cin, cout over taps)
+    total = jnp.zeros((b, hh, ww, cout), jnp.int32)
+    for r in range(kh):
+        # input rows for this tap row: xp[:, y+r, :, :] for y in [0,hh)
+        rows = xp[:, r:r + hh, :, :]                     # [B,hh,W+2p,cin]
+        rows = jnp.moveaxis(rows, -1, 2)                 # [B,hh,cin,W+2p]
+        rows_b = rows[:, :, None, :, :]                  # [B,hh,1,cin,Wp]
+        taps = w[:, :, r, :].astype(jnp.int32)           # [cout,cin,kw]
+        taps_b = taps[None, None, :, :, :]               # [1,1,cout,cin,kw]
+        rows_bc = jnp.broadcast_to(
+            rows_b, (b, hh, cout, cin, rows.shape[-1]))
+        taps_bc = jnp.broadcast_to(
+            taps_b, (b, hh, cout, cin, kw))
+        y = bseg_conv1d(taps_bc, rows_bc, plan,
+                        input_zero_point=0)              # [...,W_out]
+        total = total + jnp.moveaxis(y.sum(axis=3), 2, -1)
+    return total
+
+
+def ultranet_forward(params: UltraNetParams, img_q: jnp.ndarray,
+                     *, mode: str = "ref"):
+    """img_q: [B, H, W, 3] unsigned int4 values (int32 container).
+    Returns head output [B, H/16, W/16, 36] int32."""
+    plan = plan_bseg(INT32, W_BITS, A_BITS)
+    x = img_q.astype(jnp.int32)
+    for (cout, k, pool), w in zip(ULTRANET_LAYERS, params.convs):
+        acc = _conv2d_ref(x, w) if mode == "ref" \
+            else _conv2d_bseg(x, w, plan)
+        x = _requant_unsigned(acc)
+        if pool:
+            b, hh, ww, c = x.shape
+            x = x.reshape(b, hh // 2, 2, ww // 2, 2, c).max(axis=(2, 4))
+    acc = _conv2d_ref(x, params.head) if mode == "ref" \
+        else _conv2d_bseg(x, params.head, plan)
+    return acc
+
+
+def ultranet_multiplies(h: int, w: int, *, mode: str) -> dict:
+    """Wide-multiply counts per frame (the FPS/DSP currency of Tab II)."""
+    plan = plan_bseg(INT32, W_BITS, A_BITS)
+    per_layer = []
+    cin = 3
+    hh, ww = h, w
+    for cout, k, pool in ULTRANET_LAYERS:
+        macs = hh * ww * cout * cin * k * k
+        if mode == "naive":
+            mults = macs
+        else:
+            # k row-convs of k taps over width ww, per (cin, cout, row)
+            mults = hh * cout * cin * k \
+                * bseg_num_multiplies(k, ww + 2 * (k // 2), plan)
+        per_layer.append({"macs": macs, "mults": mults})
+        cin = cout
+        if pool:
+            hh, ww = hh // 2, ww // 2
+    macs = hh * ww * HEAD_CHANNELS * cin
+    per_layer.append({"macs": macs,
+                      "mults": macs if mode == "naive"
+                      else -(-macs // plan.density)})
+    total_macs = sum(p["macs"] for p in per_layer)
+    total_mults = sum(p["mults"] for p in per_layer)
+    return {"per_layer": per_layer, "total_macs": total_macs,
+            "total_mults": total_mults,
+            "density_achieved": total_macs / total_mults}

@@ -1,0 +1,7 @@
+"""Quantization substrate: symmetric per-channel integer quantization,
+QAT fake-quant, and the packed-weight container used by serving."""
+from .quantizer import (QuantizedTensor, dequantize, fake_quant,
+                        quantize_symmetric)
+
+__all__ = ["QuantizedTensor", "dequantize", "fake_quant",
+           "quantize_symmetric"]

@@ -1,0 +1,56 @@
+"""Symmetric per-channel quantization (the FINN-style fixed-point model).
+
+``quantize_symmetric`` maps a float tensor to w-bit signed integers with
+a per-channel scale:  x ≈ q * scale,  q in [-2^(w-1)+1, 2^(w-1)-1]
+(symmetric range keeps the packed datapaths' worst-case analysis tight —
+the paper's Eqs. 9/10 assume the full signed range, so we stay inside).
+
+``fake_quant`` is the straight-through-estimator form used for QAT.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Integer values + dequantization scale (axis: per leading channel)."""
+    values: jnp.ndarray          # int8 container, values within `bits`
+    scale: jnp.ndarray           # f32, broadcastable against values
+    bits: int
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        return (self.values.astype(jnp.float32) * self.scale).astype(dtype)
+
+
+jax.tree_util.register_dataclass(
+    QuantizedTensor, data_fields=["values", "scale"], meta_fields=["bits"])
+
+
+def quantize_symmetric(x: jnp.ndarray, bits: int, *,
+                       axis: Optional[int] = -1) -> QuantizedTensor:
+    """Per-channel symmetric quantization along ``axis`` (None: per-tensor)."""
+    qmax = (1 << (bits - 1)) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return QuantizedTensor(values=q, scale=scale.astype(jnp.float32),
+                           bits=bits)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jnp.ndarray:
+    return qt.dequantize(dtype)
+
+
+def fake_quant(x: jnp.ndarray, bits: int, *, axis: Optional[int] = -1):
+    """Straight-through fake quantization (QAT)."""
+    qt = quantize_symmetric(x, bits, axis=axis)
+    xq = qt.dequantize(x.dtype)
+    return x + jax.lax.stop_gradient(xq - x)

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, loop, checkpointing, straggler policy,
+gradient compression."""
+from . import checkpoint, grad_compress, loop, optimizer, straggler
+
+__all__ = ["checkpoint", "grad_compress", "loop", "optimizer", "straggler"]

@@ -1,0 +1,70 @@
+"""Int8 gradient all-reduce with error feedback.
+
+The paper packs low-bit values onto wide datapaths; the same idea
+applied to the *interconnect* shrinks gradient all-reduce bytes 4x
+(f32 -> int8).  Protocol (inside shard_map over the reduction axes):
+
+  1. g' = g + e            (add the residual from the previous step)
+  2. s  = psum-max(|g'|) / 127     (shared scale, one scalar per tensor)
+  3. q  = round(g'/s) int8 ; all-reduce as int32 (sum fits: n_dev*127)
+  4. g_hat = q_sum * s / n_dev ; e = g' - dequant(own q)   (feedback)
+
+Exact all-reduce of the quantized values — the only loss is the
+quantization itself, which error feedback pushes to O(1/steps).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+
+def compress_psum(g: jnp.ndarray, err: jnp.ndarray, axes: Sequence[str]):
+    """Inside-shard_map int8 all-reduce with error feedback.
+
+    Returns (g_hat mean-reduced, new_err)."""
+    gf = g.astype(jnp.float32) + err
+    amax = jnp.max(jnp.abs(gf))
+    amax = jax.lax.pmax(amax, axes[0])
+    for a in axes[1:]:
+        amax = jax.lax.pmax(amax, a)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq_local = q.astype(jnp.float32) * scale
+    new_err = gf - deq_local
+    qsum = q.astype(jnp.int32)
+    qsum = jax.lax.psum(qsum, axes[0])
+    for a in axes[1:]:
+        qsum = jax.lax.psum(qsum, a)
+    n = 1
+    for a in axes:
+        n *= jax.lax.axis_size(a)
+    g_hat = (qsum.astype(jnp.float32) * scale / n).astype(g.dtype)
+    return g_hat, new_err
+
+
+def compressed_allreduce(grads: Any, errs: Any, mesh,
+                         axis: str = "data"):
+    """shard_map wrapper for testing/driving the protocol end to end.
+
+    ``grads``/``errs`` leaves are stacked per-device local values with a
+    leading axis of size mesh.shape[axis], sharded along ``axis``.
+    Returns (mean-reduced g_hat, replicated; per-device new errors)."""
+    from jax import shard_map
+
+    def body(g_tree, e_tree):
+        flat_g, tdef = jax.tree_util.tree_flatten(g_tree)
+        flat_e = jax.tree_util.tree_flatten(e_tree)[0]
+        outs = [compress_psum(g[0], e[0], (axis,))
+                for g, e in zip(flat_g, flat_e)]
+        gh = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        ne = jax.tree_util.tree_unflatten(tdef, [o[1][None] for o in outs])
+        return gh, ne
+
+    in_spec = jax.tree_util.tree_map(lambda _: PS(axis), grads)
+    out_spec = (jax.tree_util.tree_map(lambda _: PS(), grads),
+                jax.tree_util.tree_map(lambda _: PS(axis), grads))
+    return shard_map(body, mesh=mesh, in_specs=(in_spec, in_spec),
+                     out_specs=out_spec, check_vma=False)(grads, errs)

@@ -1,0 +1,99 @@
+"""Training step: next-token CE loss, microbatched gradient
+accumulation (scan + remat), AdamW update, donated state."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import forward
+from . import optimizer
+
+
+def loss_fn(cfg: ArchConfig, params, batch: Dict[str, jnp.ndarray],
+            *, loss_chunk: int = 512):
+    """Mean next-token cross entropy, computed in sequence chunks so the
+    full [B, S, V] logits tensor is never materialized (the unembed +
+    CE runs per chunk inside a scan; memory is O(B * chunk * V / tp))."""
+    from repro.models.transformer import unembed_hidden
+    hidden = forward(cfg, params, batch, mode="hidden")
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":
+        hidden = hidden[:, cfg.n_patches:, :]     # text positions only
+    hidden = hidden[:, :-1, :]
+    targets = tokens[:, 1:]
+    b, sm1, d = hidden.shape
+    c = min(loss_chunk, sm1)
+    n_chunks = sm1 // c
+    rem = sm1 - n_chunks * c
+    vpad = cfg.vocab_padded
+
+    def ce_of(h_chunk, t_chunk):
+        logits = unembed_hidden(cfg, params, h_chunk)     # [B,c,V] f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(t_chunk, vpad, dtype=logits.dtype)
+        gold = jnp.sum(logits * onehot, axis=-1)
+        return jnp.sum(logz - gold)
+
+    def scan_fn(acc, inp):
+        h_chunk, t_chunk = inp
+        return acc + ce_of(h_chunk, t_chunk), None
+
+    hs = hidden[:, :n_chunks * c].reshape(b, n_chunks, c, d)
+    ts = targets[:, :n_chunks * c].reshape(b, n_chunks, c)
+    total, _ = jax.lax.scan(
+        scan_fn, jnp.zeros((), jnp.float32),
+        (hs.transpose(1, 0, 2, 3), ts.transpose(1, 0, 2)))
+    if rem:
+        total = total + ce_of(hidden[:, n_chunks * c:],
+                              targets[:, n_chunks * c:])
+    return total / (b * sm1)
+
+
+def make_train_step(cfg: ArchConfig, ocfg: optimizer.OptConfig,
+                    *, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, mbatch)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(acc_fn, (0.0, g0), mb)
+            loss = loss_sum / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches,
+                                           grads)
+        else:
+            loss, grads = grads_of(params, batch)
+        new_params, new_opt, metrics = optimizer.update(
+            ocfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def abstract_opt_state(ocfg: optimizer.OptConfig, params_abstract):
+    """ShapeDtypeStruct tree of the optimizer state (dry-run)."""
+    return jax.eval_shape(functools.partial(optimizer.init, ocfg),
+                          params_abstract)

@@ -1,0 +1,5 @@
+import jax
+
+# DSP48E2/DSP58 emulation needs 64-bit integer words; model code uses
+# explicit dtypes throughout so this does not perturb the smoke tests.
+jax.config.update("jax_enable_x64", True)

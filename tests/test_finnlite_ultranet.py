@@ -1,0 +1,47 @@
+"""FINN-lite resource model + UltraNet-INT4 end-to-end tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.finnlite import bseg_conv_unit, sdv_matvec_unit, ultranet_tables
+from repro.finnlite.resource import PAPER_TAB4
+from repro.models import ultranet as U
+
+
+def test_ultranet_bseg_bit_exact():
+    params = U.init_ultranet(0)
+    rng = np.random.default_rng(1)
+    img = jnp.asarray(rng.integers(0, 16, (1, 32, 32, 3)), dtype=jnp.int32)
+    y_ref = U.ultranet_forward(params, img, mode="ref")
+    y_bseg = U.ultranet_forward(params, img, mode="bseg")
+    assert y_ref.shape == (1, 2, 2, 36)
+    assert (np.asarray(y_ref) == np.asarray(y_bseg)).all()
+
+
+def test_ultranet_multiply_reduction():
+    m = U.ultranet_multiplies(416, 416, mode="bseg")
+    n = U.ultranet_multiplies(416, 416, mode="naive")
+    assert m["total_mults"] < n["total_mults"] / 2.5
+    assert m["density_achieved"] > 2.5      # INT32 datapath, k=3 taps
+
+
+def test_tab4_model_calibration():
+    t = ultranet_tables()["tab4"]
+    m, p = t["model"], t["paper"]
+    # DSP counts are combinatorial — must be near-exact
+    assert abs(m["finn_dsp"] - p["finn"]["dsp"]) <= 2
+    assert abs(m["bseg_dsp"] - p["bseg"]["dsp"]) <= 8
+    # LUT model within 25% of the paper's measurements
+    assert abs(m["finn_lut"] - p["finn"]["lut"]) / p["finn"]["lut"] < 0.25
+    assert abs(m["bseg_lut"] - p["bseg"]["lut"]) / p["bseg"]["lut"] < 0.25
+    # the headline direction: BSEG cuts LUTs by >60% at max frequency
+    assert 1 - m["bseg_lut"] / m["finn_lut"] > 0.5
+
+
+def test_unit_estimators_monotone():
+    a = sdv_matvec_unit(24, 24, 4, 4, cycles=3)
+    b = sdv_matvec_unit(48, 48, 4, 4, cycles=3)
+    assert b.dsp > a.dsp and b.lut > a.lut
+    c = bseg_conv_unit(128, 8, 16, 1500, 4, 4, out_per_cycle=8)
+    d = bseg_conv_unit(128, 8, 16, 1500, 2, 2, out_per_cycle=8)
+    assert d.dsp < c.dsp        # lower precision -> higher density

@@ -1,0 +1,121 @@
+"""Fault-tolerance / distributed-infra tests: checkpoint round-trip and
+resume, deterministic data, straggler policy, int8 gradient all-reduce
+with error feedback, 8-bit optimizer states."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import SyntheticLMData
+from repro.train import checkpoint, optimizer, straggler
+from repro.train.optimizer import OptConfig, Q8
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.int32)},
+            "step": jnp.asarray(7)}
+    path = checkpoint.save(str(tmp_path), 7, tree)
+    assert os.path.isdir(path)
+    got, meta = checkpoint.restore(str(tmp_path), 7, tree)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(got)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    tree = {"x": jnp.zeros((4,))}
+    for s in (1, 2, 3, 4, 5):
+        checkpoint.save(str(tmp_path), s, tree, keep=3)
+    assert checkpoint.latest_step(str(tmp_path)) == 5
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(dirs) == 3    # GC keeps 3
+
+
+def test_async_checkpointer(tmp_path):
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = {"x": jnp.arange(8.0)}
+    ck.save_async(1, tree)
+    ck.wait()
+    got, _ = checkpoint.restore(str(tmp_path), 1, tree)
+    assert (np.asarray(got["x"]) == np.arange(8.0)).all()
+
+
+def test_data_determinism_and_restart():
+    d1 = SyntheticLMData(vocab=100, seq_len=16, global_batch=4, seed=9)
+    d2 = SyntheticLMData(vocab=100, seq_len=16, global_batch=4, seed=9)
+    # a "restarted" pipeline resumes mid-stream bit-identically
+    a = d1.batch_at(123)["tokens"]
+    b = d2.batch_at(123)["tokens"]
+    assert (a == b).all()
+    assert not (d1.batch_at(124)["tokens"] == a).all()
+
+
+def test_straggler_policy_fake_clock():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    mon = straggler.StepMonitor(
+        straggler.StragglerPolicy(patience=2, warmup_steps=1), clock=clock)
+    durations = [1.0] * 6 + [5.0, 5.0]          # sustained straggle
+    for d in durations:
+        mon.start()
+        t[0] += d
+        mon.stop()
+    assert mon.should_mitigate
+    mon2 = straggler.StepMonitor(
+        straggler.StragglerPolicy(patience=2, warmup_steps=1), clock=clock)
+    for d in [1.0] * 6 + [5.0, 1.0, 5.0, 1.0]:  # isolated blips
+        mon2.start()
+        t[0] += d
+        mon2.stop()
+    assert not mon2.should_mitigate
+
+
+def test_8bit_moment_roundtrip():
+    cfg = OptConfig(moments_8bit=True)
+    params = {"w": jnp.ones((64, 128)) * 0.1}
+    st = optimizer.init(cfg, params)
+    assert isinstance(st["m"]["w"], Q8)
+    grads = {"w": jnp.full((64, 128), 0.01)}
+    p2, st2, m = optimizer.update(cfg, grads, st, params)
+    assert np.isfinite(np.asarray(p2["w"])).all()
+    assert isinstance(st2["m"]["w"], Q8)
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OptConfig(lr=1e-3, lr_min=1e-4, warmup=10, total_steps=100)
+    lr5 = float(optimizer.schedule(cfg, jnp.asarray(5)))
+    lr10 = float(optimizer.schedule(cfg, jnp.asarray(10)))
+    lr100 = float(optimizer.schedule(cfg, jnp.asarray(100)))
+    assert lr5 < lr10 and abs(lr10 - 1e-3) < 1e-6
+    assert abs(lr100 - 1e-4) < 1e-6
+
+
+def test_grad_compress_error_feedback():
+    """int8 AR: single shot has quantization error; error feedback makes
+    the *running sum* converge to the true mean."""
+    from repro.train.grad_compress import compress_psum
+    # emulate psum over one device (axis size 1) via direct math:
+    rng = np.random.default_rng(0)
+    g = rng.standard_normal((256,)).astype(np.float32) * 1e-3
+
+    # reference single-device quantize/dequant loop with feedback:
+    err = np.zeros_like(g)
+    acc = np.zeros_like(g)
+    acc_true = np.zeros_like(g)
+    for step in range(50):
+        gf = g + err
+        scale = max(np.abs(gf).max(), 1e-12) / 127.0
+        q = np.clip(np.round(gf / scale), -127, 127)
+        deq = q * scale
+        err = gf - deq
+        acc += deq
+        acc_true += g
+    rel = np.abs(acc - acc_true).max() / np.abs(acc_true).max()
+    assert rel < 0.01, rel    # feedback keeps long-run error ~1 quantum
