@@ -1,0 +1,8 @@
+.PHONY: test dev-deps
+
+# tier-1 verify (ROADMAP.md): the whole suite, fail-fast, quiet
+test:
+	./scripts/ci.sh
+
+dev-deps:
+	pip install -r requirements-dev.txt

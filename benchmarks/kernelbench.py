@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core.datapath import INT32, plan_bseg, plan_sdv
 from repro.kernels import ops, ref
+from repro.kernels.sdv_matmul import sdv_num_multiplies
 
 
 def _t(fn, n=3):
@@ -52,6 +53,19 @@ def kernel_latencies():
                  _t(lambda: ops.sdv_matvec(xq, words, plan=plan, m=256,
                                            use_kernel=True)),
                  f"{plan.n} MACs per int32 multiply"))
+    # sdv batched GEMM through the packed_matmul dispatch layer — the
+    # serving/training shapes (rows >> GEMV) the GEMV kernel never saw
+    for nrows in (32, 128):
+        xg = jnp.asarray(rng.integers(-128, 128, (nrows, 512)),
+                         dtype=jnp.int8)
+        route = ops.select_packed_route(nrows, plan=plan)
+        rows.append((
+            f"kern.sdv_matmul.{nrows}x256x512.us",
+            _t(lambda xg=xg: ops.packed_matmul(xg, words, plan=plan,
+                                               m=256)),
+            f"route={route}; "
+            f"{sdv_num_multiplies(nrows, 256, 512, plan)} wide multiplies "
+            f"for {nrows * 256 * 512} MACs"))
     # bseg conv
     planb = plan_bseg(INT32, 4, 4)
     taps = jnp.asarray(rng.integers(-8, 8, (128, 4)))
@@ -79,6 +93,14 @@ def packed_vs_naive():
             rows.append((f"density.bseg_int32.w{wa}a{wb}", 0.0, b.density))
         except ValueError:
             rows.append((f"density.bseg_int32.w{wa}a{wb}", 0.0, 0))
+    # wide-multiply density of the batched GEMM (sdv_num_multiplies is
+    # the bseg_num_multiplies analogue for SDV): reduction vs the naive
+    # rows*m*k count is exactly the lane-packing density n
+    p48 = plan_sdv(INT32, 4, 8, park_sign_bits=True)
+    for nrows, m, k in ((8, 256, 512), (64, 256, 512), (256, 1024, 1024)):
+        wide = sdv_num_multiplies(nrows, m, k, p48)
+        rows.append((f"density.sdv_matmul.{nrows}x{m}x{k}.w4a8.reduction",
+                     0.0, round(nrows * m * k / wide, 3)))
     # memory-side packing: bits per weight in HBM
     for w in (8, 4, 2):
         rows.append((f"hbm.bits_per_weight.packed.w{w}", 0.0, w))

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification (the exact command from ROADMAP.md).  A red suite
+# must fail loudly here — collection errors included — so breakage can
+# never hide behind an already-failing run again.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

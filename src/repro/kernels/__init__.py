@@ -2,9 +2,10 @@
 
 Layout:
   sdv_matvec.py   SDV packed GEMV (pre-adder + mod-4 spill tracker)
+  sdv_matmul.py   SDV packed GEMM (batched/blocked; signed+unsigned)
   bseg_conv1d.py  BSEG packed depthwise conv (guard bits + hi/lo staging)
   quant_matmul.py unpack-in-kernel MXU matmul (packed_memory mode)
   packbits.py     dense w-bit <-> int32 lane-word layout
-  ops.py          jit'd wrappers (the public API; pure-jnp fallbacks)
+  ops.py          jit'd wrappers + the packed_matmul dispatch layer
   ref.py          pure-jnp oracles for every kernel
 """

@@ -5,6 +5,31 @@ zero points, dequantization scales) and exposes a ``use_kernel`` switch:
 ``True`` runs the Pallas kernel (interpret mode on CPU, compiled on
 TPU), ``False`` runs an equivalent pure-jnp path — the form the model
 layer lowers in the multi-pod dry-run, where XLA owns the fusion.
+
+Dispatch table for ``packed_matmul`` (mode -> kernel -> constraints):
+
+  mode           kernel                      weight format      constraints
+  -------------  --------------------------  -----------------  ------------------------------
+  sdv_matmul     kernels/sdv_matmul (GEMM,   SDV storage words  integer x; ``plan`` given;
+                 grid R/br x G/bg x K/bk)    [K, G] int32       ``plan.spec.exact_wrap``;
+                                                                rows > GEMV_MAX_ROWS in auto
+  sdv_matvec     kernels/sdv_matvec (GEMV,   SDV storage words  integer x; ``plan`` given;
+                 grid B/bb x G/bg x K/bk)    [K, G] int32       ``plan.spec.exact_wrap``;
+                                                                signed-element storage only;
+                                                                rows <= GEMV_MAX_ROWS in auto
+  quant_matmul   kernels/quant_matmul        lane words         float x; no ``plan`` (memory
+                 (memory-packed, dequant     [K, N/(32/w)]      packing only); ``scale`` and
+                 in-kernel)                  int32 + scale      ``w_bits`` given
+  ref            pure jnp (XLA owns fusion)  either             always available; selected in
+                                                                auto when ``use_kernel`` is
+                                                                False or the datapath is not
+                                                                exact-wrap (fp32m rounds, so
+                                                                SDV spill tracking is invalid)
+
+``mode="auto"`` picks the first row that satisfies its constraints, in
+the order ref-conditions -> sdv_matvec/sdv_matmul (by batch rows) ->
+quant_matmul (no plan).  Explicit modes raise ``ValueError`` when their
+constraints cannot be met rather than silently falling back.
 """
 from __future__ import annotations
 
@@ -70,22 +95,28 @@ def quant_matmul(x: jnp.ndarray, w_packed: jnp.ndarray, scale: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def prepare_sdv_weights(w_int: jnp.ndarray, plan: SDVPlan) -> jnp.ndarray:
-    """[M, K] ints (w_a-bit signed) -> [K, G] int32 storage words.
+    """[M, K] ints (w_a-bit, signedness per ``plan.signed_a``) -> [K, G]
+    int32 storage words.
 
-    Word layout: sign-sliced remainder fields (D) in the low
+    Signed layout: sign-sliced remainder fields (D) in the low
     ``plan.packed_width`` bits, the n sign bits parked above — the two
-    pre-adder operands in one word.
+    pre-adder operands in one word.  Unsigned layout: the values sit
+    directly in their lanes (no pre-adder needed).
     """
     m, k = w_int.shape
     n = plan.n
     g = -(-m // n)
     wp = jnp.pad(w_int, ((0, g * n - m), (0, 0))).reshape(g, n, k)
-    r, s = signed_split.split_signed(wp.astype(jnp.int32), plan.w_a)
     word = jnp.zeros((g, k), jnp.int32)
-    for i in range(n):
-        word = word | (r[:, i, :].astype(jnp.int32) << (i * plan.lane))
-        word = word | (s[:, i, :].astype(jnp.int32)
-                       << (plan.packed_width + i))
+    if plan.signed_a:
+        r, s = signed_split.split_signed(wp.astype(jnp.int32), plan.w_a)
+        for i in range(n):
+            word = word | (r[:, i, :].astype(jnp.int32) << (i * plan.lane))
+            word = word | (s[:, i, :].astype(jnp.int32)
+                           << (plan.packed_width + i))
+    else:
+        for i in range(n):
+            word = word | (wp[:, i, :].astype(jnp.int32) << (i * plan.lane))
     return word.T                                           # [K, G]
 
 
@@ -109,17 +140,134 @@ def sdv_matvec(x_q: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
             interpret=_on_cpu())                            # [B, G, n]
         return lanes.reshape(b, -1)[:, :m]
     # pure-jnp path: unpack words back to ints and do the exact GEMV
-    g = w_words.shape[1]
-    d_mask = (1 << plan.packed_width) - 1
-    d_word = w_words & d_mask
-    vals = []
-    for i in range(plan.n):
-        r_i = (d_word >> (i * plan.lane)) & ((1 << (plan.w_a - 1)) - 1)
-        s_i = (w_words >> (plan.packed_width + i)) & 1
-        vals.append(r_i - (s_i << (plan.w_a - 1)))
-    w_int = jnp.stack(vals, axis=-1).reshape(k, g * plan.n)  # [K, M_pad]
+    w_int = ref.sdv_unpack_words_ref(w_words, plan=plan)     # [K, M_pad]
     y = ref.sdv_matvec_ref(x_q, w_int.T)
     return y[:, :m]
+
+
+# ---------------------------------------------------------------------------
+# packed_matmul  (dispatch layer — see the module docstring table)
+# ---------------------------------------------------------------------------
+
+#: ``mode="auto"`` routes row counts up to this through the GEMV kernel
+#: (its row blocks are sized for decode micro-batches); anything larger
+#: takes the blocked GEMM kernel.
+GEMV_MAX_ROWS = 8
+
+_PACKED_MODES = ("auto", "sdv_matmul", "sdv_matvec", "quant_matmul", "ref")
+
+
+def select_packed_route(rows: int, *, plan: Optional[SDVPlan] = None,
+                        use_kernel: bool = True,
+                        mode: str = "auto") -> str:
+    """Pick the kernel for a packed matmul (the module-docstring table).
+
+    Pure function of (batch rows, bitwidth plan, backend capability) so
+    the routing itself is testable without running any kernel.
+    """
+    if mode not in _PACKED_MODES:
+        raise ValueError(f"unknown packed_matmul mode {mode!r}")
+    if mode in ("sdv_matmul", "sdv_matvec"):
+        if plan is None:
+            raise ValueError(f"mode {mode!r} needs an SDVPlan")
+        if not plan.spec.exact_wrap:
+            raise ValueError(
+                f"mode {mode!r} needs exact-wrap arithmetic; datapath "
+                f"{plan.spec.name} rounds (fp32)")
+        if mode == "sdv_matvec" and not plan.signed_a:
+            raise ValueError(
+                "the GEMV kernel stores signed elements only (parked "
+                "sign bits); use sdv_matmul for unsigned plans")
+        return mode
+    if mode == "quant_matmul":
+        if plan is not None:
+            raise ValueError(
+                "mode 'quant_matmul' takes memory-packed lane words, "
+                "not an SDV plan")
+        return mode
+    if mode == "ref":
+        return mode
+    # --- auto ---
+    if plan is None:
+        return "quant_matmul" if use_kernel else "ref"
+    if not use_kernel or not plan.spec.exact_wrap:
+        return "ref"
+    if rows <= GEMV_MAX_ROWS and plan.signed_a:
+        return "sdv_matvec"
+    return "sdv_matmul"
+
+
+def packed_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
+                  plan: Optional[SDVPlan] = None, m: Optional[int] = None,
+                  scale: Optional[jnp.ndarray] = None,
+                  w_bits: Optional[int] = None,
+                  mode: str = "auto", use_kernel: bool = True,
+                  block_rows: int = 128, block_g: int = 128,
+                  block_k: int = 512) -> jnp.ndarray:
+    """Batched packed matmul with kernel dispatch.
+
+    Args:
+      x: activations ``[..., K]`` — integer (within ``plan.w_b`` bits)
+        for the SDV routes, float for the memory-packed route.
+      w: SDV storage words ``[K, G]`` when ``plan`` is given, else
+        memory-packed lane words ``[K, N/(32/w_bits)]``.
+      plan: SDV lane plan; ``None`` selects the memory-packed side of
+        the table.
+      m: real output-channel count (trims the ``G*n`` lane padding);
+        defaults to all lanes.
+      scale / w_bits: dequantization scale ``[N]`` and element width —
+        required by the ``quant_matmul`` route only.
+      mode: a row of the dispatch table, or ``"auto"``.
+
+    Returns:
+      ``[..., M]`` — int32 (exact) on the SDV/ref integer routes, f32
+      on the memory-packed route.
+    """
+    batch_shape, k = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, k)
+    route = select_packed_route(
+        x2.shape[0], plan=plan, use_kernel=use_kernel, mode=mode)
+
+    if plan is None:  # memory-packed lane words (kernel or jnp ref)
+        if scale is None or w_bits is None:
+            raise ValueError(f"route {route!r} needs scale and w_bits")
+        y = quant_matmul(x2, w, scale, w=w_bits,
+                         use_kernel=(route == "quant_matmul"),
+                         block_m=block_rows, block_n=block_g,
+                         block_k=block_k)
+        y = y if m is None else y[:, :m]
+        return y.reshape(batch_shape + y.shape[-1:])
+
+    if not jnp.issubdtype(x.dtype, jnp.integer):
+        # float activations would be silently truncated by the integer
+        # datapath — quantize to w_b bits first (models/quantized.py
+        # sdv_matmul_apply) or use the memory-packed route
+        raise ValueError(
+            f"route {route!r} needs integer activations within "
+            f"plan.w_b={plan.w_b} bits, got {x.dtype}")
+
+    g = w.shape[1]
+    m = g * plan.n if m is None else m
+    if route == "ref":
+        w_int = ref.sdv_unpack_words_ref(w, plan=plan)       # [K, M_pad]
+        y = ref.sdv_matmul_ref(x2, w_int.T)[:, :m]
+        return y.reshape(batch_shape + (m,))
+
+    if route == "sdv_matvec":
+        y = sdv_matvec(x2.astype(jnp.int32), w, plan=plan, m=m,
+                       use_kernel=True, block_g=block_g, block_k=block_k)
+        return y.reshape(batch_shape + (m,))
+
+    # sdv_matmul
+    from . import sdv_matmul as sdvmm_kernel
+    bk = min(block_k, k)
+    if k % bk:
+        bk = k  # fall back to a single K block (no per-call pad copy)
+    lanes = sdvmm_kernel.sdv_matmul(x2.astype(jnp.int32), w, plan=plan,
+                                    br=block_rows, bg=block_g, bk=bk,
+                                    interpret=_on_cpu())     # [R, G, n]
+    y = lanes.reshape(x2.shape[0], -1)[:, :m]
+    return y.reshape(batch_shape + (m,))
 
 
 # ---------------------------------------------------------------------------

@@ -41,6 +41,36 @@ def sdv_matvec_ref(x_int: jnp.ndarray, w_int: jnp.ndarray) -> jnp.ndarray:
     return (x_int.astype(jnp.int32) @ w_int.astype(jnp.int32).T)
 
 
+def sdv_matmul_ref(x_int: jnp.ndarray, w_int: jnp.ndarray) -> jnp.ndarray:
+    """Exact integer GEMM with arbitrary leading batch dims:
+    x [..., k] ints, w [m, k] ints -> [..., m] i32."""
+    return jnp.einsum("...k,mk->...m", x_int.astype(jnp.int32),
+                      w_int.astype(jnp.int32))
+
+
+def sdv_unpack_words_ref(w_words: jnp.ndarray, *, plan) -> jnp.ndarray:
+    """Decode [K, G] SDV storage words back to integer elements
+    [K, G*n] (lane-major: group g's lanes are columns g*n .. g*n+n-1).
+
+    Signed layout: remainder fields in the low ``plan.packed_width``
+    bits, sign bits parked above (value = r - 2^(w_a-1) s).  Unsigned
+    layout: the lane fields are the values.
+    """
+    k, g = w_words.shape
+    vals = []
+    for i in range(plan.n):
+        if plan.signed_a:
+            d_mask = (1 << plan.packed_width) - 1
+            d_word = w_words & d_mask
+            r_i = (d_word >> (i * plan.lane)) & ((1 << (plan.w_a - 1)) - 1)
+            s_i = (w_words >> (plan.packed_width + i)) & 1
+            vals.append(r_i - (s_i << (plan.w_a - 1)))
+        else:
+            vals.append((w_words >> (i * plan.lane))
+                        & ((1 << plan.w_a) - 1))
+    return jnp.stack(vals, axis=-1).reshape(k, g * plan.n)
+
+
 def conv1d_causal_ref(x_int: jnp.ndarray, taps: jnp.ndarray) -> jnp.ndarray:
     """Exact depthwise causal 1-D correlation.
 

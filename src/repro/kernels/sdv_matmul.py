@@ -1,0 +1,182 @@
+"""SDV packed GEMM Pallas kernel (paper Sec. III-C, batched form).
+
+Generalizes ``kernels/sdv_matvec`` from a GEMV to a blocked, batched
+GEMM: the activation operand is a full ``[R, K]`` row block (R =
+flattened batch x tokens), so the one wide int32 multiply per (row,
+group, k) is amortized over ``n`` lane-packed output channels *and*
+reused across the row block — the dominant serving/training GEMM
+shapes, not just single-vector decode.
+
+Same on-chip architecture as the GEMV kernel:
+
+  * HBM storage: one int32 word per (output-group, k).  Signed
+    elements store the sign-sliced remainder fields (the D word) with
+    the n sign bits parked above the packed field; unsigned elements
+    store the lane fields directly (no sign bits — the protection bit
+    is a leading zero, Sec. III-C);
+  * the pre-adder ``packed = D - A`` is materialized in-kernel for the
+    signed layout (Fig. 3); the unsigned layout skips it;
+  * the fractured-LUT reference multiplier: 2-LSB products mod 4;
+  * the spill-over tracker: mod-4 mismatch -> spill in [-1, 1] for
+    signed operands, [0, 2] when both operands are unsigned (Fig. 4);
+  * the Eq. 3 extractor on the final k step.
+
+Grid: (R/br, G/bg, K/bk) with K innermost; the accumulator word and
+the spill totals live in VMEM scratch across K steps.  Rows are
+blocked at GEMM granularity (default 128) instead of the GEMV
+kernel's 8, and the activation block is row-major ``[br, bk]`` — no
+caller-side transpose.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.datapath import SDVPlan
+
+
+def _lsb2(d_word, sign_bits, i: int, lane: int, w_a: int, signed_a: bool):
+    """Two LSBs of element i (a_i & 3) from the stored fields."""
+    r2 = (d_word >> (i * lane)) & 3
+    if not signed_a or w_a >= 3:
+        return r2                       # sign weight 2^(w_a-1) = 0 (mod 4)
+    s = (sign_bits >> i) & 1
+    return (r2 + 2 * s) & 3             # signed w_a == 2: a = r - 2 s
+
+
+def _body(plan_n: int, lane: int, w_a: int, signed_a: bool, signed: bool,
+          sign_shift: int, nsteps_k: int, bk: int, x_k_axis: int,
+          x_ref, w_ref, o_ref, word_ref, spill_ref):
+    """Shared GEMM/GEMV kernel body.
+
+    ``x_k_axis`` selects the activation block layout: 1 for the GEMM's
+    row-major ``[rows, bk]`` block, 0 for the GEMV's K-major
+    ``[bk, rows]`` block (``kernels/sdv_matvec`` reuses this body).
+    """
+    k_step = pl.program_id(2)
+    n = plan_n
+
+    @pl.when(k_step == 0)
+    def _init():
+        word_ref[...] = jnp.zeros_like(word_ref)
+        spill_ref[...] = jnp.zeros_like(spill_ref)
+
+    xb = x_ref[...].astype(jnp.int32)     # [rows, bk] or [bk, rows]
+    wbw = w_ref[...]                      # [bk, bg] int32 storage words
+    d_mask = (1 << sign_shift) - 1
+
+    def step(j, carry):
+        word, spills = carry
+        xk = jax.lax.dynamic_index_in_dim(xb, j, x_k_axis,
+                                          keepdims=False)             # [rows]
+        stored = jax.lax.dynamic_index_in_dim(wbw, j, 0, keepdims=False)
+        d_word = stored & d_mask
+        if signed_a:
+            sign_bits = (stored >> sign_shift) & ((1 << n) - 1)
+            # ---- the pre-adder: packed = D - A (Fig. 3) ----------------
+            a_word = jnp.zeros_like(d_word)
+            for i in range(n):
+                a_word += ((sign_bits >> i) & 1) << (i * lane + w_a - 1)
+            packed = d_word - a_word                                  # [bg]
+        else:
+            sign_bits = jnp.zeros_like(d_word)
+            packed = d_word               # unsigned: plain concatenation
+        # ---- wide MAC --------------------------------------------------
+        word2 = word + packed[None, :] * xk[:, None]                  # [br,bg]
+        # ---- mod-4 spill tracking (fractured-LUT reference) ------------
+        x4 = (xk & 3)[:, None]                                        # [br,1]
+        new_spills = []
+        for i in range(1, n + 1):
+            prev = (word >> (i * lane)) & 3
+            obs = (word2 >> (i * lane)) & 3
+            if i < n:
+                p4 = (_lsb2(d_word, sign_bits, i, lane, w_a,
+                            signed_a)[None, :] * x4) & 3
+            else:
+                p4 = 0                    # virtual observer lane
+            mm = (obs - prev - p4) & 3
+            # signed products spill [-1, 1]; unsigned spill [0, 2]
+            delta = jnp.where(mm == 3, -1, mm) if signed else mm
+            new_spills.append(spills[..., i - 1] + delta)
+        spills = jnp.stack(new_spills, axis=-1)                       # [br,bg,n]
+        return word2, spills
+
+    word, spills = jax.lax.fori_loop(
+        0, bk, step, (word_ref[...], spill_ref[...]))
+    word_ref[...] = word
+    spill_ref[...] = spills
+
+    @pl.when(k_step == nsteps_k - 1)
+    def _extract():
+        # Eq. 3:  R̂_i = (2^L S_i + R_i) - S_{i-1}
+        mask = (1 << lane) - 1
+        outs = []
+        for i in range(n):
+            field = (word >> (i * lane)) & mask
+            s_i = spills[..., i]
+            s_prev = spills[..., i - 1] if i > 0 else 0
+            outs.append((s_i << lane) + field - s_prev)
+        o_ref[...] = jnp.stack(outs, axis=-1)                         # [br,bg,n]
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "br", "bg", "bk",
+                                             "interpret"))
+def sdv_matmul(x_q: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
+               br: int = 128, bg: int = 128, bk: int = 512,
+               interpret: bool = True) -> jnp.ndarray:
+    """Packed GEMM.
+
+    Args:
+      x_q: [R, K] integer activations (row-major), values within w_b
+        bits (signed or unsigned per ``plan.signed_b``).
+      w_words: [K, G] int32 storage words (``prepare_sdv_weights``).
+      plan: SDV lane plan on the INT32 datapath.
+
+    Returns:
+      [R, G, n] int32 — exact per-lane dot products (dequantize
+      outside).  K must be a multiple of ``bk`` (zero-pad K outside:
+      zero activations produce zero products and zero spills, so the
+      padding is exact).
+    """
+    r, k = x_q.shape
+    _, g = w_words.shape
+    n, lane = plan.n, plan.lane
+    sign_shift = plan.packed_width
+    if plan.signed_a:
+        assert sign_shift + n <= 32, "no room to park sign bits"
+    br = min(br, r)
+    bg = min(bg, g)
+    bk = min(bk, k)
+    assert k % bk == 0, (k, bk)
+    signed = plan.signed_a or plan.signed_b
+    grid = (pl.cdiv(r, br), pl.cdiv(g, bg), k // bk)
+    return pl.pallas_call(
+        functools.partial(_body, n, lane, plan.w_a, plan.signed_a, signed,
+                          sign_shift, k // bk, bk, 1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bk), lambda ir, ig, ik: (ir, ik)),
+            pl.BlockSpec((bk, bg), lambda ir, ig, ik: (ik, ig)),
+        ],
+        out_specs=pl.BlockSpec((br, bg, n), lambda ir, ig, ik: (ir, ig, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, g, n), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((br, bg), jnp.int32),
+            pltpu.VMEM((br, bg, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x_q, w_words)
+
+
+def sdv_num_multiplies(rows: int, m: int, k: int, plan: SDVPlan) -> int:
+    """Wide int32 multiplies an SDV GEMM spends on an ``[rows, k] @
+    [k, m]`` product — the paper's operational-density currency
+    (``bseg_num_multiplies`` analogue for SDV): one multiply covers
+    ``plan.n`` output channels, so the reduction vs the naive count
+    ``rows * m * k`` is exactly the packing density."""
+    groups = -(-m // plan.n)
+    return rows * groups * k

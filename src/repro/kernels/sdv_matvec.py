@@ -18,6 +18,11 @@ end to end, on-chip:
 Grid: (B/bb, G/bg, K/bk) with K innermost; the accumulator word and the
 spill totals live in VMEM scratch across K steps.  Layouts are K-major
 so the per-step slice is a sublane read.
+
+The kernel body (pre-adder, spill tracker, extractor) is shared with
+the batched GEMM kernel — ``kernels/sdv_matmul._body`` with the
+K-major activation layout (``x_k_axis=0``); this wrapper is the
+decode-micro-batch special case.
 """
 from __future__ import annotations
 
@@ -29,77 +34,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.datapath import SDVPlan
-
-
-def _lsb2(d_word, sign_bits, i: int, lane: int, w_a: int):
-    """Two LSBs of element i (a_i & 3) from the D fields + sign bits."""
-    r2 = (d_word >> (i * lane)) & 3
-    if w_a >= 3:
-        return r2                       # 2^(w_a-1) = 0 (mod 4)
-    s = (sign_bits >> i) & 1
-    return (r2 + 2 * s) & 3             # w_a == 2: a = r - 2 s
-
-
-def _body(plan_n: int, lane: int, w_a: int, sign_shift: int, nsteps_k: int,
-          bk: int, x_ref, w_ref, o_ref, word_ref, spill_ref):
-    k_step = pl.program_id(2)
-    n = plan_n
-
-    @pl.when(k_step == 0)
-    def _init():
-        word_ref[...] = jnp.zeros_like(word_ref)
-        spill_ref[...] = jnp.zeros_like(spill_ref)
-
-    xb = x_ref[...].astype(jnp.int32)     # [bk, bb]
-    wbw = w_ref[...]                      # [bk, bg] int32 (D | signs<<shift)
-    d_mask = (1 << sign_shift) - 1
-
-    def step(j, carry):
-        word, spills = carry
-        xk = jax.lax.dynamic_index_in_dim(xb, j, 0, keepdims=False)   # [bb]
-        stored = jax.lax.dynamic_index_in_dim(wbw, j, 0, keepdims=False)
-        d_word = stored & d_mask
-        sign_bits = (stored >> sign_shift) & ((1 << n) - 1)
-        # ---- the pre-adder: packed = D - A (Fig. 3) --------------------
-        a_word = jnp.zeros_like(d_word)
-        for i in range(n):
-            a_word += ((sign_bits >> i) & 1) << (i * lane + w_a - 1)
-        packed = d_word - a_word                                      # [bg]
-        # ---- wide MAC --------------------------------------------------
-        word2 = word + packed[None, :] * xk[:, None]                  # [bb,bg]
-        # ---- mod-4 spill tracking (fractured-LUT reference) ------------
-        x4 = (xk & 3)[:, None]                                        # [bb,1]
-        new_spills = []
-        for i in range(1, n + 1):
-            prev = (word >> (i * lane)) & 3
-            obs = (word2 >> (i * lane)) & 3
-            if i < n:
-                p4 = (_lsb2(d_word, sign_bits, i, lane, w_a)[None, :]
-                      * x4) & 3
-            else:
-                p4 = 0                    # virtual observer lane
-            mm = (obs - prev - p4) & 3
-            delta = jnp.where(mm == 3, -1, mm)
-            new_spills.append(spills[..., i - 1] + delta)
-        spills = jnp.stack(new_spills, axis=-1)                       # [bb,bg,n]
-        return word2, spills
-
-    word, spills = jax.lax.fori_loop(
-        0, bk, step, (word_ref[...], spill_ref[...]))
-    word_ref[...] = word
-    spill_ref[...] = spills
-
-    @pl.when(k_step == nsteps_k - 1)
-    def _extract():
-        # Eq. 3:  R̂_i = (2^L S_i + R_i) - S_{i-1}
-        mask = (1 << lane) - 1
-        outs = []
-        for i in range(n):
-            field = (word >> (i * lane)) & mask
-            s_i = spills[..., i]
-            s_prev = spills[..., i - 1] if i > 0 else 0
-            outs.append((s_i << lane) + field - s_prev)
-        o_ref[...] = jnp.stack(outs, axis=-1)                         # [bb,bg,n]
+from .sdv_matmul import _body
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "bb", "bg", "bk",
@@ -126,9 +61,11 @@ def sdv_matvec(x_t: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
     bg = min(bg, g)
     bk = min(bk, k)
     assert k % bk == 0, (k, bk)
+    signed = plan.signed_a or plan.signed_b
     grid = (pl.cdiv(b, bb), pl.cdiv(g, bg), k // bk)
     return pl.pallas_call(
-        functools.partial(_body, n, lane, plan.w_a, sign_shift, k // bk, bk),
+        functools.partial(_body, n, lane, plan.w_a, plan.signed_a, signed,
+                          sign_shift, k // bk, bk, 0),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bk, bb), lambda ib, ig, ik: (ik, ib)),

@@ -1,7 +1,13 @@
 """Serving launcher: quantized lane-packed weights, batched decode with
 the int8 KV cache — the deployment form of the paper's technique.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke
+``--packed-compute sdv`` runs every 2-D projection on the SDV
+arithmetic datapath (batched decode GEMMs go through the
+``kernels/ops.packed_matmul`` dispatch layer); ``memory`` packs the
+weights in HBM only and lets XLA own the dequant+matmul fusion.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+      --packed-compute sdv
 """
 from __future__ import annotations
 
@@ -21,6 +27,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--weight-bits", type=int, default=4)
+    ap.add_argument("--packed-compute", choices=("memory", "sdv"),
+                    default="sdv")
+    ap.add_argument("--act-bits", type=int, default=8,
+                    help="activation width on the SDV datapath")
     args = ap.parse_args()
 
     from repro.configs.registry import get_arch
@@ -32,12 +42,17 @@ def main():
         cfg = cfg.reduced()
     rules = Rules(tp=None, fsdp=None, ep=None, batch=())
     params = values(init_params(cfg, rules, jax.random.PRNGKey(0)))
-    qparams = serve_params(params, bits=args.weight_bits, min_size=1024)
+    qparams = serve_params(params, bits=args.weight_bits, min_size=1024,
+                           compute=args.packed_compute,
+                           act_bits=args.act_bits)
 
     smax = args.prompt_len + args.new_tokens
     cache = values(init_cache(cfg, rules, args.batch, smax))
     kv_note = "int8" if "k_scale" in cache else "bf16"
-    print(f"{cfg.name}: packed W{args.weight_bits} weights, "
+    compute_note = (f"SDV W{args.weight_bits}A{args.act_bits} datapath"
+                    if args.packed_compute == "sdv"
+                    else f"packed W{args.weight_bits} memory")
+    print(f"{cfg.name}: {compute_note}, "
           f"{kv_note} KV cache, batch {args.batch}")
 
     rng = np.random.default_rng(0)
@@ -57,8 +72,11 @@ def main():
                              axis=-1).astype(jnp.int32)
             gen.append(np.asarray(tok)[:, 0])
     dt = time.perf_counter() - t0
+    path_note = ("packed_matmul dispatch (ref route off-TPU)"
+                 if args.packed_compute == "sdv"
+                 else "interpret-free jnp path")
     print(f"{args.batch * (smax - 1) / dt:.1f} tok/s "
-          f"(CPU, interpret-free jnp path)")
+          f"({jax.default_backend()}, {path_note})")
     print("sample:", np.stack(gen, 1)[0][:12])
 
 

@@ -1,8 +1,11 @@
 """Model library: composable layers + the 10 assigned architectures."""
 from .param import Init, Rules, P, values, specs, is_p
 from .transformer import (decode_step, forward, init_cache, init_params)
-from .quantized import PackedLinear, materialize, pack_linear, serve_params
+from .quantized import (PackedLinear, SDVLinear, default_sdv_plan,
+                        materialize, pack_linear, pack_linear_sdv,
+                        serve_params)
 
 __all__ = ["Init", "Rules", "P", "values", "specs", "is_p", "decode_step",
            "forward", "init_cache", "init_params", "PackedLinear",
-           "materialize", "pack_linear", "serve_params"]
+           "SDVLinear", "default_sdv_plan", "materialize", "pack_linear",
+           "pack_linear_sdv", "serve_params"]

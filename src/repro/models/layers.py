@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from .param import Init, P
-from .quantized import is_packed, materialize
+from .quantized import is_packed, is_sdv, materialize, sdv_matmul_apply
 from . import shard_ctx
 
 
@@ -57,7 +57,13 @@ def dense_init(ini: Init, d_in: int, d_out: int, axes, *, bias: bool = False,
 
 
 def dense_apply(params, x):
-    y = x @ mat(params["kernel"], x.dtype)
+    w = params["kernel"]
+    if is_sdv(w):
+        # arithmetic packing: the GEMM runs on the SDV datapath through
+        # the packed_matmul dispatch layer (never materialized)
+        y = sdv_matmul_apply(w, x)
+    else:
+        y = x @ mat(w, x.dtype)
     if "bias" in params:
         y = y + params["bias"].astype(x.dtype)
     return y

@@ -1,23 +1,33 @@
-"""Quantized, lane-packed serving parameters (``packed_memory`` mode).
+"""Quantized, lane-packed serving parameters.
 
-``serve_params`` rewrites a trained parameter tree: every large
-projection kernel becomes a ``PackedLinear`` — w-bit symmetric
-per-output-channel quantization, 32/w values per int32 lane word in HBM.
-The layer library transparently dispatches on the container type, so
-``decode_step``/``forward`` run unchanged with 16/w x less weight
-traffic — the paper's packing applied to the TPU memory roofline.
+``serve_params`` rewrites a trained parameter tree; the layer library
+transparently dispatches on the container type, so ``decode_step``/
+``forward`` run unchanged.  Two packing modes:
 
-The arithmetic-packing execution (`packed_compute`) lives in
-kernels/sdv_matvec and kernels/bseg_conv1d and is exercised by the
-examples and benchmarks; see DESIGN.md §2 for when each mode wins.
+  * ``compute="memory"`` (``packed_memory``): every large projection
+    kernel becomes a ``PackedLinear`` — w-bit symmetric per-output-
+    channel quantization, 32/w values per int32 lane word in HBM; the
+    paper's packing applied to the TPU memory roofline.
+  * ``compute="sdv"`` (``packed_compute_sdv``): 2-D projection kernels
+    become ``SDVLinear`` — the same quantization stored as SDV words
+    ([K, G] int32, n output channels lane-packed per word), executed
+    through the ``kernels/ops.packed_matmul`` dispatch layer so batched
+    decode/prefill GEMMs run on the packed arithmetic datapath
+    (activations are dynamically quantized per row to ``plan.w_b``
+    bits).  Kernels with more than 2 dims (MoE expert banks) keep the
+    memory packing.
+
+See DESIGN.md §2 for when each mode wins.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.datapath import INT32, SDVPlan, plan_sdv
 
 
 @dataclasses.dataclass
@@ -32,6 +42,21 @@ class PackedLinear:
 
 jax.tree_util.register_dataclass(PackedLinear, data_fields=["words", "scale"],
                                  meta_fields=["bits", "d_out"])
+
+
+@dataclasses.dataclass
+class SDVLinear:
+    """Arithmetic-packed quantized kernel: SDV storage words
+    [d_in, G] int32 (G = ceil(d_out/plan.n) lane groups), scale
+    [d_out] f32; executed via ``kernels/ops.packed_matmul``."""
+    words: jnp.ndarray
+    scale: jnp.ndarray
+    plan: SDVPlan
+    d_out: int
+
+
+jax.tree_util.register_dataclass(SDVLinear, data_fields=["words", "scale"],
+                                 meta_fields=["plan", "d_out"])
 
 
 def pack_linear(kernel: jnp.ndarray, bits: int) -> PackedLinear:
@@ -58,8 +83,59 @@ def pack_linear(kernel: jnp.ndarray, bits: int) -> PackedLinear:
                         bits=bits, d_out=d_out)
 
 
-def materialize(pl: PackedLinear, dtype=jnp.bfloat16) -> jnp.ndarray:
+def default_sdv_plan(bits: int, act_bits: int = 8) -> SDVPlan:
+    """The serving lane plan: ``bits``-wide signed weights against
+    ``act_bits``-wide signed activations on the TPU int32 datapath."""
+    return plan_sdv(INT32, bits, act_bits, signed_a=True, signed_b=True,
+                    park_sign_bits=True)
+
+
+def pack_linear_sdv(kernel: jnp.ndarray, plan: SDVPlan) -> SDVLinear:
+    """kernel [d_in, d_out] float -> SDVLinear (w_a-bit symmetric
+    per-output-channel quantization stored as SDV words)."""
+    from repro.kernels import ops
+    assert kernel.ndim == 2, kernel.shape
+    qmax = (1 << (plan.w_a - 1)) - 1
+    kf = kernel.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(kf), axis=0)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(kf / scale), -qmax, qmax).astype(jnp.int32)
+    words = ops.prepare_sdv_weights(q.T, plan)               # [d_in, G]
+    return SDVLinear(words=words, scale=scale.astype(jnp.float32),
+                     plan=plan, d_out=kernel.shape[-1])
+
+
+def sdv_matmul_apply(qw: SDVLinear, x: jnp.ndarray,
+                     use_kernel: Optional[bool] = None) -> jnp.ndarray:
+    """x [..., d_in] @ SDV-packed kernel -> [..., d_out] in x.dtype.
+
+    Activations are dynamically quantized per row (symmetric,
+    ``plan.w_b`` bits); the integer GEMM goes through the
+    ``packed_matmul`` dispatch layer, the two scales dequantize the
+    exact int32 lane results.  ``use_kernel`` defaults to the backend:
+    Pallas on TPU, the pure-jnp SDV-word decode path on CPU (interpret
+    mode is for tests, not serving).
+    """
+    from repro.kernels import ops
+    if use_kernel is None:
+        use_kernel = jax.default_backend() != "cpu"
+    qmax = (1 << (qw.plan.w_b - 1)) - 1
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    xs = jnp.maximum(amax, 1e-8) / qmax
+    xq = jnp.clip(jnp.round(xf / xs), -qmax, qmax).astype(jnp.int32)
+    y = ops.packed_matmul(xq, qw.words, plan=qw.plan, m=qw.d_out,
+                          use_kernel=use_kernel)
+    return (y.astype(jnp.float32) * xs * qw.scale[None, :]).astype(x.dtype)
+
+
+def materialize(pl, dtype=jnp.bfloat16) -> jnp.ndarray:
     """Unpack + dequantize -> [..., d_in, d_out] in ``dtype``."""
+    if isinstance(pl, SDVLinear):
+        from repro.kernels import ref
+        w_int = ref.sdv_unpack_words_ref(pl.words, plan=pl.plan)
+        return (w_int[:, :pl.d_out].astype(jnp.float32)
+                * pl.scale[None, :]).astype(dtype)
     per = 32 // pl.bits
     w, mask = pl.bits, (1 << pl.bits) - 1
     cols = []
@@ -74,7 +150,11 @@ def materialize(pl: PackedLinear, dtype=jnp.bfloat16) -> jnp.ndarray:
 
 
 def is_packed(x) -> bool:
-    return isinstance(x, PackedLinear)
+    return isinstance(x, (PackedLinear, SDVLinear))
+
+
+def is_sdv(x) -> bool:
+    return isinstance(x, SDVLinear)
 
 
 _QUANT_LEAF_NAMES = ("kernel", "wi_gate", "wi_up", "wo")
@@ -82,8 +162,24 @@ _SKIP_CONTAINERS = ("router", "conv", "proj_patches")
 
 
 def serve_params(params: Any, bits: int = 4,
-                 min_size: int = 1 << 16) -> Any:
-    """Rewrite a parameter *value* tree for quantized packed serving."""
+                 min_size: int = 1 << 16, compute: str = "memory",
+                 act_bits: int = 8) -> Any:
+    """Rewrite a parameter *value* tree for quantized packed serving.
+
+    ``compute="memory"`` packs every eligible kernel as ``PackedLinear``
+    (HBM lane words); ``compute="sdv"`` packs 2-D kernels as
+    ``SDVLinear`` (arithmetic packing — the GEMMs execute on the SDV
+    datapath via ``packed_matmul``), keeping memory packing for >2-D
+    expert banks.
+    """
+    if compute not in ("memory", "sdv"):
+        raise ValueError(f"unknown packed compute mode {compute!r}")
+    plan = default_sdv_plan(bits, act_bits) if compute == "sdv" else None
+
+    def quantize(v):
+        if plan is not None and v.ndim == 2:
+            return pack_linear_sdv(v, plan)
+        return pack_linear(v, bits)
 
     def walk(tree, name):
         if isinstance(tree, dict):
@@ -95,7 +191,7 @@ def serve_params(params: Any, bits: int = 4,
                     out[k] = walk(v, k)
                 elif k in _QUANT_LEAF_NAMES and hasattr(v, "ndim") \
                         and v.ndim >= 2 and v.size >= min_size:
-                    out[k] = pack_linear(v, bits)
+                    out[k] = quantize(v)
                 else:
                     out[k] = v
             return out
@@ -105,7 +201,7 @@ def serve_params(params: Any, bits: int = 4,
     # the LM head is a plain array leaf at top level
     if isinstance(out, dict) and "lm_head" in out \
             and not is_packed(out["lm_head"]):
-        out["lm_head"] = pack_linear(out["lm_head"], bits)
+        out["lm_head"] = quantize(out["lm_head"])
     return out
 
 

@@ -20,6 +20,22 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
+try:                                    # jax >= 0.6: promoted to jax.shard_map
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _shard_map_unchecked(body, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off on any jax version
+    (the kwarg was renamed ``check_rep`` -> ``check_vma``)."""
+    try:
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
 
 def compress_psum(g: jnp.ndarray, err: jnp.ndarray, axes: Sequence[str]):
     """Inside-shard_map int8 all-reduce with error feedback.
@@ -40,7 +56,12 @@ def compress_psum(g: jnp.ndarray, err: jnp.ndarray, axes: Sequence[str]):
         qsum = jax.lax.psum(qsum, a)
     n = 1
     for a in axes:
-        n *= jax.lax.axis_size(a)
+        # jax.lax.axis_size only exists on newer jax; psum of a unit is
+        # the portable spelling (constant-folded, no real collective).
+        if hasattr(jax.lax, "axis_size"):
+            n *= jax.lax.axis_size(a)
+        else:
+            n *= jax.lax.psum(1, a)
     g_hat = (qsum.astype(jnp.float32) * scale / n).astype(g.dtype)
     return g_hat, new_err
 
@@ -52,7 +73,6 @@ def compressed_allreduce(grads: Any, errs: Any, mesh,
     ``grads``/``errs`` leaves are stacked per-device local values with a
     leading axis of size mesh.shape[axis], sharded along ``axis``.
     Returns (mean-reduced g_hat, replicated; per-device new errors)."""
-    from jax import shard_map
 
     def body(g_tree, e_tree):
         flat_g, tdef = jax.tree_util.tree_flatten(g_tree)
@@ -66,5 +86,5 @@ def compressed_allreduce(grads: Any, errs: Any, mesh,
     in_spec = jax.tree_util.tree_map(lambda _: PS(axis), grads)
     out_spec = (jax.tree_util.tree_map(lambda _: PS(), grads),
                 jax.tree_util.tree_map(lambda _: PS(axis), grads))
-    return shard_map(body, mesh=mesh, in_specs=(in_spec, in_spec),
-                     out_specs=out_spec, check_vma=False)(grads, errs)
+    return _shard_map_unchecked(body, mesh, (in_spec, in_spec),
+                                out_spec)(grads, errs)

@@ -3,11 +3,34 @@
 Hypothesis sweeps bit-widths, signedness, shapes and values; every
 packed computation must be bit-exact against plain integer math.
 """
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:
+    # hypothesis is an optional dev dependency (requirements-dev.txt).
+    # Property tests skip cleanly; the deterministic anchor tests below
+    # still run.  Stubs keep the @hypothesis.given decorators importable.
+    class _SkipGiven:
+        def given(self, *a, **k):
+            return lambda fn: pytest.mark.skip(
+                reason="hypothesis not installed")(fn)
+
+        def settings(self, *a, **k):
+            return lambda fn: fn
+
+        def assume(self, *a, **k):
+            raise RuntimeError("unreachable: test body is skipped")
+
+    class _SkipStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    hypothesis = _SkipGiven()
+    st = _SkipStrategies()
 
 from repro.core import (DSP48E2, DSP58, FP32M, INT32, bseg_conv1d,
                         bseg_density, pack_signed, plan_bseg, plan_sdv,
