@@ -4,6 +4,10 @@ multiply-count reductions that are the paper's currency.
 Interpret-mode wall time is NOT TPU performance — the derived column
 (wide multiplies per MAC, bytes per weight) is the roofline-relevant
 output; kernels are validated bit-exactly in tests/test_kernels.py.
+
+Standalone:  PYTHONPATH=src python benchmarks/kernelbench.py \
+                 [--json BENCH_2.json] [--size 32] [--smoke]
+writes the per-PR trajectory file (wall clock + multiply counts).
 """
 from __future__ import annotations
 
@@ -19,11 +23,12 @@ from repro.kernels.sdv_matmul import sdv_num_multiplies
 
 
 def _t(fn, n=3):
-    fn()
+    jax.block_until_ready(fn())
     t0 = time.perf_counter()
     for _ in range(n):
-        out = fn()
-    jax.block_until_ready(out)
+        # sync INSIDE the timed loop: without it only the final repeat
+        # was synchronized and reported latencies were understated
+        jax.block_until_ready(fn())
     return (time.perf_counter() - t0) / n * 1e6
 
 
@@ -79,6 +84,75 @@ def kernel_latencies():
     return rows
 
 
+def ultranet_conv_latencies(size: int = 32, repeats: int = 3):
+    """Per-layer UltraNet conv frames through the packed_conv2d
+    dispatch (the cross-channel BSEG conv2d Pallas kernel / im2col)
+    vs the seed broadcast-materialized jnp path, with the
+    ``bseg_num_multiplies`` density accounting per layer."""
+    from repro.models import ultranet as U
+    plan = plan_bseg(INT32, U.W_BITS, U.A_BITS)
+    counts = U.ultranet_multiplies(size, size, mode="bseg")["per_layer"]
+    rng = np.random.default_rng(5)
+    rows = []
+    for i, s in enumerate(U.ultranet_layer_shapes(size, size)):
+        x = jnp.asarray(rng.integers(0, 16, (1, s["h"], s["w"], s["cin"])),
+                        dtype=jnp.int32)
+        w = jnp.asarray(rng.integers(-8, 8,
+                                     (s["cout"], s["cin"], s["k"], s["k"])),
+                        dtype=jnp.int8)
+        route = ops.select_conv_route(x.shape, w.shape, plan=plan)
+        tag = (f"L{i}.{s['cin']}x{s['cout']}x{s['k']}"
+               f".{s['h']}x{s['w']}")
+        macs, mults = counts[i]["macs"], counts[i]["mults"]
+        rows.append((
+            f"ultranet.conv.{tag}.packed.us",
+            _t(lambda x=x, w=w: ops.packed_conv2d(x, w, plan=plan),
+               n=repeats),
+            f"route={route}; {mults} wide multiplies for {macs} MACs "
+            f"({macs / mults:.2f} MACs/multiply)"))
+        rows.append((
+            f"ultranet.conv.{tag}.seed_jnp.us",
+            _t(lambda x=x, w=w: U._conv2d_bseg_jnp(x, w, plan),
+               n=repeats),
+            "seed broadcast-materialized jnp baseline"))
+    return rows
+
+
+def ultranet_frame(size: int = 32, repeats: int = 2) -> dict:
+    """End-to-end UltraNet frame wall clock: packed-conv kernel path vs
+    the seed jnp path, plus the (size-independent) density accounting —
+    the BENCH_<pr>.json acceptance payload."""
+    from repro.models import ultranet as U
+    assert size % 16 == 0, f"UltraNet pools 4x: size must be 16k, got {size}"
+    params = U.init_ultranet(0)
+    rng = np.random.default_rng(6)
+    img = jnp.asarray(rng.integers(0, 16, (1, size, size, 3)),
+                      dtype=jnp.int32)
+    t_packed = _t(lambda: U.ultranet_forward(params, img, mode="bseg"),
+                  n=repeats)
+    t_seed = _t(lambda: U.ultranet_forward(params, img, mode="bseg_jnp"),
+                n=repeats)
+    y_ref = U.ultranet_forward(params, img, mode="ref")
+    y_bseg = U.ultranet_forward(params, img, mode="bseg")
+    m416 = U.ultranet_multiplies(416, 416, mode="bseg")
+    n416 = U.ultranet_multiplies(416, 416, mode="naive")
+    return {
+        "frame": [size, size],
+        "bit_exact_vs_integer_oracle":
+            bool((np.asarray(y_ref) == np.asarray(y_bseg)).all()),
+        "wall_us_packed_kernel": t_packed,
+        "wall_us_seed_jnp": t_seed,
+        "speedup_vs_seed": t_seed / max(t_packed, 1e-9),
+        "conv_routes": U.ultranet_conv_routes(size, size),
+        "multiplies_416": {
+            "total_macs": m416["total_macs"],
+            "total_mults": m416["total_mults"],
+            "naive_mults": n416["total_mults"],
+            "density_achieved": m416["density_achieved"],
+        },
+    }
+
+
 def packed_vs_naive():
     """The paper's headline currencies on the TPU datapaths."""
     rows = []
@@ -107,3 +181,57 @@ def packed_vs_naive():
     rows.append(("hbm.bits_per_weight.bf16", 0.0, 16))
     rows.append(("hbm.decode_weight_traffic_reduction.w4", 0.0, 4.0))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# --json trajectory file (BENCH_<pr>.json)
+# ---------------------------------------------------------------------------
+
+def bench_json(path: str, *, size: int = 32, repeats: int = 3) -> dict:
+    """Collect every row + the end-to-end UltraNet frame comparison and
+    write the per-PR trajectory JSON."""
+    import json
+
+    rows = []
+    for fn in (kernel_latencies,
+               lambda: ultranet_conv_latencies(size, repeats),
+               packed_vs_naive):
+        rows.extend(fn())
+    payload = {
+        "pr": 2,
+        "rows": [{"name": n, "us_per_call": us, "derived": str(d)}
+                 for n, us, d in rows],
+        "ultranet": ultranet_frame(size, repeats=max(1, repeats - 1)),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return payload
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_2.json",
+                    help="trajectory file to write")
+    ap.add_argument("--size", type=int, default=32,
+                    help="UltraNet bench frame size")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / single repeat (CI smoke)")
+    args = ap.parse_args()
+    jax.config.update("jax_enable_x64", True)
+
+    size = 16 if args.smoke else args.size
+    repeats = 1 if args.smoke else 3
+    payload = bench_json(args.json, size=size, repeats=repeats)
+    u = payload["ultranet"]
+    print(f"wrote {args.json}: UltraNet {size}x{size} frame "
+          f"packed-kernel {u['wall_us_packed_kernel'] / 1e3:.1f}ms vs "
+          f"seed-jnp {u['wall_us_seed_jnp'] / 1e3:.1f}ms "
+          f"({u['speedup_vs_seed']:.1f}x), bit-exact: "
+          f"{u['bit_exact_vs_integer_oracle']}, density(416): "
+          f"{u['multiplies_416']['density_achieved']:.2f} MACs/multiply")
+
+
+if __name__ == "__main__":
+    main()

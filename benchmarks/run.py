@@ -23,6 +23,7 @@ def main() -> None:
                paper_tables.tab3_layers,
                paper_tables.tab4_maxfreq,
                kernelbench.kernel_latencies,
+               kernelbench.ultranet_conv_latencies,
                kernelbench.packed_vs_naive):
         try:
             rows.extend(fn())

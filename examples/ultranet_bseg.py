@@ -24,17 +24,27 @@ def main():
     img = jnp.asarray(rng.integers(0, 16, (1, args.size, args.size, 3)),
                       dtype=jnp.int32)
 
+    import jax
     t0 = time.perf_counter()
-    y_ref = U.ultranet_forward(params, img, mode="ref")
+    y_ref = jax.block_until_ready(
+        U.ultranet_forward(params, img, mode="ref"))
     t_ref = time.perf_counter() - t0
     t0 = time.perf_counter()
-    y_bseg = U.ultranet_forward(params, img, mode="bseg")
+    y_bseg = jax.block_until_ready(
+        U.ultranet_forward(params, img, mode="bseg"))
     t_bseg = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax.block_until_ready(U.ultranet_forward(params, img, mode="bseg"))
+    t_warm = time.perf_counter() - t0
     exact = bool((np.asarray(y_ref) == np.asarray(y_bseg)).all())
     print(f"UltraNet {args.size}x{args.size}: head {tuple(y_ref.shape)}, "
-          f"BSEG bit-exact vs conv oracle: {exact}")
-    print(f"(CPU wall: ref {t_ref:.2f}s, bseg-emulated {t_bseg:.2f}s — "
-          "the packed path is counted in wide multiplies, not CPU time)")
+          f"BSEG bit-exact vs integer conv oracle: {exact}")
+    routes = U.ultranet_conv_routes(args.size, args.size)
+    print("conv dispatch:",
+          " ".join(f"L{i}:{r}" for i, r in enumerate(routes)))
+    print(f"(CPU wall: ref {t_ref:.2f}s, packed-conv kernels "
+          f"{t_bseg:.2f}s cold / {t_warm:.2f}s warm — Pallas interpret "
+          "mode; the packed path is counted in wide multiplies)")
 
     m = U.ultranet_multiplies(416, 416, mode="bseg")
     n = U.ultranet_multiplies(416, 416, mode="naive")

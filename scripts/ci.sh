@@ -5,4 +5,8 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# bench smoke: the kernel benchmarks must RUN on tiny shapes (the
+# trajectory JSON goes to a scratch path, not the tracked BENCH_<pr>)
+python benchmarks/kernelbench.py --smoke \
+    --json "${TMPDIR:-/tmp}/bench_smoke.json"
 exec python -m pytest -x -q "$@"

@@ -4,8 +4,11 @@ Layout:
   sdv_matvec.py   SDV packed GEMV (pre-adder + mod-4 spill tracker)
   sdv_matmul.py   SDV packed GEMM (batched/blocked; signed+unsigned)
   bseg_conv1d.py  BSEG packed depthwise conv (guard bits + hi/lo staging)
+  bseg_conv2d.py  BSEG packed cross-channel conv2d (batched, blocked)
+  bseg_common.py  shared Fig. 6/7 word-slicing step for the BSEG kernels
   quant_matmul.py unpack-in-kernel MXU matmul (packed_memory mode)
   packbits.py     dense w-bit <-> int32 lane-word layout
-  ops.py          jit'd wrappers + the packed_matmul dispatch layer
+  ops.py          jit'd wrappers + the packed_matmul / packed_conv2d
+                  dispatch layers
   ref.py          pure-jnp oracles for every kernel
 """

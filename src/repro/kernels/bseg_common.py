@@ -1,0 +1,63 @@
+"""Shared BSEG pipeline machinery for the Pallas conv kernels.
+
+Both the depthwise 1-D kernel (``bseg_conv1d``) and the cross-channel
+2-D kernel (``bseg_conv2d``) run the same Fig. 6 schedule on every wide
+multiply word: the ``n_i`` completed low lanes are emitted (guard bias
+removed), the carried lanes are sliced into a resident low part that
+stays on the datapath — re-biased, shifted down ``n_i`` lanes into the
+next carry word (the DSP C-port / cascade) — and a high part that is
+accumulated into the output buffer in fabric (Fig. 7).  This module is
+that per-word step, factored out so the two kernels cannot drift.
+
+Everything here runs *inside* a Pallas kernel body: int32 arrays only,
+static Python loops over lanes (``n_lanes`` is tiny), no jnp dtype
+promotion surprises.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.datapath import BSEGPlan
+
+
+def bias_word_full(plan: BSEGPlan) -> int:
+    """All ``n_lanes`` lanes loaded with the 2^(L-1) guard bias."""
+    return sum((1 << (p * plan.lane)) * plan.bias
+               for p in range(plan.n_lanes))
+
+
+def bias_word_top(plan: BSEGPlan) -> int:
+    """Fresh bias for the ``n_i`` lanes newly exposed at the top after
+    the carry word shifts down ``n_i`` lanes."""
+    return sum((1 << (p * plan.lane)) * plan.bias
+               for p in range(plan.n_lanes - plan.n_i, plan.n_lanes))
+
+
+def split_word(word: jnp.ndarray, plan: BSEGPlan
+               ) -> Tuple[List[jnp.ndarray], jnp.ndarray]:
+    """One Fig. 6/7 post-multiply step on a wide word (any shape, i32).
+
+    Returns ``(lanes, c_next)`` where ``lanes`` has ``plan.n_lanes``
+    entries shaped like ``word``: the first ``n_i`` are completed
+    outputs (bias removed), the rest are the extracted high parts of
+    the carried lanes; ``c_next`` is the re-biased carry word for the
+    next step (resident low parts shifted down ``n_i`` lanes, fresh
+    bias on the newly exposed top lanes).
+    """
+    n_i, n_lanes, L = plan.n_i, plan.n_lanes, plan.lane
+    bias = plan.bias
+    lane_mask = (1 << L) - 1
+    lo_mask = (1 << plan.w_l) - 1
+    lanes = []
+    for p in range(n_i):                       # completed outputs
+        f = (word >> (p * L)) & lane_mask
+        lanes.append(f - bias)
+    c_next = jnp.zeros_like(word) + jnp.int32(bias_word_top(plan))
+    for p in range(n_i, n_lanes):              # carried lanes: hi/lo slice
+        f = (word >> (p * L)) & lane_mask
+        lo = f & lo_mask
+        lanes.append((f - lo) - bias)          # tracked in fabric
+        c_next = c_next + ((lo + bias) << ((p - n_i) * L))
+    return lanes, c_next

@@ -25,21 +25,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.datapath import BSEGPlan
+from . import bseg_common
 
 
 def _body(plan: BSEGPlan, n_groups: int, n_steps: int, s_out: int,
           x_ref, kap_ref, o_ref, buf_ref, carry_ref):
-    n_k, n_i, L, w_l = plan.n_k, plan.n_i, plan.lane, plan.w_l
+    n_k, n_i, L = plan.n_k, plan.n_i, plan.lane
     n_lanes = plan.n_lanes
-    bias = plan.bias
-    lane_mask = (1 << L) - 1
-    lo_mask = (1 << w_l) - 1
-    bias_word_full = sum((1 << (p * L)) * bias for p in range(n_lanes))
-    bias_top = sum((1 << (p * L)) * bias
-                   for p in range(n_lanes - n_i, n_lanes))
 
     buf_ref[...] = jnp.zeros_like(buf_ref)
-    carry_ref[...] = jnp.full_like(carry_ref, 0) + jnp.int32(bias_word_full)
+    carry_ref[...] = jnp.full_like(carry_ref, 0) \
+        + jnp.int32(bseg_common.bias_word_full(plan))
 
     xb = x_ref[0]                                # [s_pad, bc] int8 unsigned
     kap = kap_ref[...]                           # [n_groups, bc] int32
@@ -54,21 +50,10 @@ def _body(plan: BSEGPlan, n_groups: int, n_steps: int, s_out: int,
             for j in range(n_i):
                 iota = iota + (rows[j] << (j * L))
             word = kap[g] * iota + carry_ref[g]  # wide MAC + C port
-            # completed low lanes -> emit
-            ems = []
-            for p in range(n_i):
-                f = (word >> (p * L)) & lane_mask
-                ems.append(f - bias)
-            # carried lanes -> slice hi/lo (Fig. 7)
-            his = []
-            c_next = jnp.zeros_like(word) + jnp.int32(bias_top)
-            for p in range(n_i, n_lanes):
-                f = (word >> (p * L)) & lane_mask
-                lo = f & lo_mask
-                his.append((f - lo) - bias)
-                c_next = c_next + ((lo + bias) << ((p - n_i) * L))
+            # emit completed lanes + slice carried lanes (Fig. 7)
+            lanes, c_next = bseg_common.split_word(word, plan)
             carry_ref[g] = c_next
-            upd = upd + jnp.stack(ems + his, axis=0)
+            upd = upd + jnp.stack(lanes, axis=0)
         prev = jax.lax.dynamic_slice_in_dim(buf_ref[...], tau, n_lanes,
                                             axis=0)
         buf_ref[...] = jax.lax.dynamic_update_slice_in_dim(

@@ -1,0 +1,167 @@
+"""Cross-channel BSEG packed conv2d Pallas kernel (paper Sec. III-D).
+
+Generalizes ``kernels/bseg_conv1d`` from a depthwise 1-D conv to the
+full dense conv2d the paper's UltraNet evaluation is built on: a
+``kh x kw`` conv over ``C_in`` input channels becomes ONE kernel launch
+instead of ``kh`` broadcast-materialized jnp passes (the seed
+``models/ultranet._conv2d_bseg_jnp`` path).
+
+Mapping (Figs. 6/7):
+
+  * every kernel row r of every input channel ci is a 1-D BSEG row
+    conv: kw taps packed (reversed, pre-adder) into ceil(kw/n_k) tap
+    groups, n_i input samples packed per step — one wide int32 multiply
+    performs n_k * n_i MACs;
+  * the (r, ci) pipelines are *fused into one vectorized axis* of size
+    kh * C_in: their wide words advance in lock-step through the Fig. 6
+    schedule, each with its own packed-partial carry word (the DSP
+    C-port / cascade), kept per tap group as a fori_loop carry;
+  * guard-bit slicing (Fig. 7) happens per lane per pipeline *before*
+    the cross-channel reduction: the resident low part is re-biased
+    back onto the datapath, only the extracted high parts and the
+    completed low lanes are summed over (r, ci) — the paper's adder
+    tree — into the VMEM row accumulator;
+  * output channels ride the VPU lane dimension (``bco`` lanes), output
+    rows the sublane dimension (``bh``): one word computation is a
+    ``[bh, kh*C_in, bco]`` elementwise multiply, i.e. every wide
+    multiplier in the emulated array is busy every step.
+
+Grid: (batch, H_out/bh, C_out/bco).  The activation block is the full
+padded frame (rows are re-read with a kh-1 halo via in-kernel dynamic
+slices — BlockSpec offsets are block-strided, so overlapping row blocks
+cannot be expressed in the index map); the accumulator buffer
+[bh, n_steps*n_i + n_lanes, bco] lives in VMEM scratch.
+
+Stride 1, 'same' padding (odd kw, or kh == kw == 1); the ops wrapper
+owns padding, zero points and layout (see ``ops.packed_conv2d``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.datapath import BSEGPlan
+from . import bseg_common
+
+
+def _body(plan: BSEGPlan, n_groups: int, kh: int, n_steps: int,
+          w_out: int, bh: int, x_ref, kap_ref, o_ref, buf_ref):
+    n_k, n_i = plan.n_k, plan.n_i
+    L = plan.lane
+    n_lanes = plan.n_lanes
+
+    buf_ref[...] = jnp.zeros_like(buf_ref)
+
+    xb = x_ref[0]                          # [H_pad, W_pad, C_in] int8
+    c_in = xb.shape[2]
+    bco = kap_ref.shape[3]
+    khc = kh * c_in
+    row0 = pl.program_id(1) * bh
+
+    # fuse the (kernel row, input channel) pipelines into one axis:
+    # xf[y, w, r*C_in + ci] = xb[row0 + y + r, w, ci]
+    xf = jnp.concatenate(
+        [jax.lax.dynamic_slice_in_dim(xb, row0 + r, bh, axis=0)
+         for r in range(kh)], axis=2)      # [bh, W_pad, kh*C_in]
+    xf = xf.astype(jnp.int32)
+    kap = kap_ref[...].reshape(n_groups, khc, bco)
+
+    for g in range(n_groups):
+        kap_g = kap[g]                     # [khc, bco]
+
+        def step(t, carry, g=g, kap_g=kap_g):
+            tau = t * n_i
+            seg = jax.lax.dynamic_slice_in_dim(
+                xf, tau + g * n_k, n_i, axis=1)        # [bh, n_i, khc]
+            iota = jnp.zeros((bh, khc), jnp.int32)
+            for j in range(n_i):
+                iota = iota + (seg[:, j, :] << (j * L))
+            word = kap_g[None] * iota[..., None] + carry   # [bh, khc, bco]
+            # Fig. 7 slicing per pipeline, THEN the adder tree over (r, ci)
+            lanes, c_next = bseg_common.split_word(word, plan)
+            upd = jnp.stack([l.sum(axis=1, dtype=jnp.int32) for l in lanes],
+                            axis=1)                        # [bh, n_lanes, bco]
+            prev = jax.lax.dynamic_slice(
+                buf_ref[...], (0, tau, 0), (bh, n_lanes, bco))
+            buf_ref[...] = jax.lax.dynamic_update_slice(
+                buf_ref[...], prev + upd, (0, tau, 0))
+            return c_next
+
+        carry0 = jnp.full((bh, khc, bco),
+                          bseg_common.bias_word_full(plan), jnp.int32)
+        jax.lax.fori_loop(0, n_steps, step, carry0)
+
+    # buffer index = output column + n_k - 1
+    o_ref[0] = jax.lax.slice_in_dim(buf_ref[...], n_k - 1, n_k - 1 + w_out,
+                                    axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "h_out", "w_out",
+                                             "bh", "bco", "interpret"))
+def bseg_conv2d(x_pad: jnp.ndarray, kappa: jnp.ndarray, *, plan: BSEGPlan,
+                h_out: int, w_out: int, bh: int = 8, bco: int = 128,
+                interpret: bool = True) -> jnp.ndarray:
+    """Dense stride-1 conv2d through the BSEG datapath.
+
+    Args:
+      x_pad: [B, H_pad, W_pad, C_in] int8, unsigned values in
+        [0, 2^w_i), already 'same'-padded on H (H_pad = h_out + kh - 1)
+        and padded on W to cover the step schedule (see
+        ``ops.packed_conv2d`` for the exact amount).
+      kappa: [G, kh, C_in, C_out] int32 packed kernel-row factors (one
+        per tap group, pre-adder applied at weight-prep time).
+      plan: BSEG plan on the INT32 datapath.
+      h_out / w_out: output frame size.
+      bh / bco: output-row / output-channel block sizes (must divide
+        h_out / C_out; the ops wrapper downgrades them if not).
+
+    Returns:
+      [B, h_out, w_out, C_out] int32 — exact correlation totals summed
+      over kernel rows and input channels (guard bias removed; any
+      zero-point correction happens in the ops wrapper).
+    """
+    b, h_pad, w_pad, c_in = x_pad.shape
+    n_groups, kh, kc, c_out = kappa.shape
+    assert kc == c_in, (kc, c_in)
+    assert h_pad >= h_out + kh - 1, (h_pad, h_out, kh)
+    n_k, n_i = plan.n_k, plan.n_i
+    n_steps = -(-(w_out + n_k - 1) // n_i)
+    need = (n_steps - 1) * n_i + (n_groups - 1) * n_k + n_i
+    assert w_pad >= need, (w_pad, need)
+    bh = min(bh, h_out)
+    bco = min(bco, c_out)
+    assert h_out % bh == 0 and c_out % bco == 0, (h_out, bh, c_out, bco)
+    buf_len = n_steps * n_i + plan.n_lanes + 8
+    grid = (b, h_out // bh, c_out // bco)
+    return pl.pallas_call(
+        functools.partial(_body, plan, n_groups, kh, n_steps, w_out, bh),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h_pad, w_pad, c_in),
+                         lambda ib, ih, ic: (ib, 0, 0, 0)),
+            pl.BlockSpec((n_groups, kh, c_in, bco),
+                         lambda ib, ih, ic: (0, 0, 0, ic)),
+        ],
+        out_specs=pl.BlockSpec((1, bh, w_out, bco),
+                               lambda ib, ih, ic: (ib, ih, 0, ic)),
+        out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, c_out), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((bh, buf_len, bco), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x_pad, kappa)
+
+
+def bseg_conv2d_num_multiplies(h_out: int, w_out: int, c_in: int,
+                               c_out: int, kh: int, kw: int,
+                               plan: BSEGPlan) -> int:
+    """Wide int32 multiplies one ``bseg_conv2d`` launch spends — the
+    operational-density currency.  Every (output row, kernel row, input
+    channel, output channel, tap group, step) is one wide multiply."""
+    n_groups = -(-kw // plan.n_k)
+    n_steps = -(-(w_out + plan.n_k - 1) // plan.n_i)
+    return h_out * kh * c_in * c_out * n_groups * n_steps

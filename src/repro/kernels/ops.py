@@ -30,6 +30,34 @@ Dispatch table for ``packed_matmul`` (mode -> kernel -> constraints):
 the order ref-conditions -> sdv_matvec/sdv_matmul (by batch rows) ->
 quant_matmul (no plan).  Explicit modes raise ``ValueError`` when their
 constraints cannot be met rather than silently falling back.
+
+Dispatch table for ``packed_conv2d`` (mode -> kernel -> constraints):
+
+  mode           kernel                      constraints
+  -------------  --------------------------  ------------------------------
+  bseg_conv2d    kernels/bseg_conv2d         integer x; BSEG ``plan`` with
+                 (cross-channel batched      ``exact_wrap``; stride 1,
+                 conv2d, grid B x H/bh x     'same' pad: odd kh and kw
+                 C_out/bco, fused (kh,C_in)
+                 pipeline axis, VMEM row
+                 accumulator)
+  bseg_conv1d    kernels/bseg_conv1d         depthwise shape only
+                 (depthwise, channels on     (C_in == 1, kh == 1, C_out
+                 the VPU lanes)              == x channels); same plan
+                                             constraints
+  im2col         kernels/sdv_matmul via      integer x; patches unfolded
+                 ``packed_matmul`` (SDV      in jnp, compute on the SDV
+                 plan derived from the       datapath; odd kh and kw
+                 BSEG widths: signed
+                 w_i+1-bit activations)
+  ref            pure jnp integer conv       always available; selected
+                 (XLA owns the fusion)       in auto when ``use_kernel``
+                                             is False or the datapath is
+                                             not exact-wrap
+
+``mode="auto"`` routes ref-conditions -> bseg_conv1d (depthwise shape)
+-> im2col (1x1 kernels — a conv with no spatial reuse is a GEMM) ->
+bseg_conv2d (everything else).
 """
 from __future__ import annotations
 
@@ -293,27 +321,218 @@ def prepare_bseg_taps(taps: jnp.ndarray, plan: BSEGPlan):
 
 def bseg_conv1d(x_q: jnp.ndarray, kappa: jnp.ndarray, tap_sum: jnp.ndarray,
                 *, plan: BSEGPlan, n_taps: int, zero_point: int = 0,
+                padding: str = "causal",
                 use_kernel: bool = True) -> jnp.ndarray:
-    """Depthwise causal conv1d: x_q [B, S, C] int8 (signed, zero_point
-    shifts it to the unsigned datapath domain); returns [B, S, C] i32."""
+    """Depthwise conv1d: x_q [B, S, C] int8 (signed, zero_point shifts
+    it to the unsigned datapath domain); returns [B, S, C] i32.
+
+    ``padding="causal"`` aligns output s with inputs s-n+1..s (decode
+    convs); ``"same"`` centers the window (the conv2d depthwise route).
+    """
     b, s, c = x_q.shape
     n = n_taps
     n_groups = kappa.shape[0]
+    if padding not in ("causal", "same"):
+        raise ValueError(f"unknown padding {padding!r}")
+    left = n - 1 if padding == "causal" else (n - 1) // 2
     if not use_kernel:
         taps = _unpack_bseg_taps(kappa, plan, n)
-        return ref.conv1d_causal_ref(x_q, taps)
+        return ref.conv1d_ref(x_q, taps, left)
     xu = (x_q.astype(jnp.int32) + zero_point).astype(jnp.int8)
     n_steps = -(-(s + plan.n_k - 1) // plan.n_i)
     need = (n_steps - 1) * plan.n_i + (n_groups - 1) * plan.n_k + plan.n_i
-    # the causal left pad is signed-zero, i.e. the *zero point* in the
+    # the boundary pad is signed-zero, i.e. the *zero point* in the
     # unsigned datapath domain (the uniform zp*sum(taps) correction then
-    # holds at the boundary too); right pad only feeds discarded outputs.
-    x_pad = jnp.pad(xu, ((0, 0), (n - 1, max(0, need - (s + n - 1))), (0, 0)),
+    # holds at the boundary too); extra right pad only feeds discarded
+    # outputs.
+    x_pad = jnp.pad(xu, ((0, 0), (left, max(0, need - (s + left))), (0, 0)),
                     constant_values=zero_point)
     y = bseg_kernel.bseg_conv1d(x_pad, kappa, plan=plan, s_out=s,
                                 interpret=_on_cpu())
     if zero_point:
         y = y - zero_point * tap_sum[None, None, :]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# packed_conv2d  (dispatch layer — see the module docstring table)
+# ---------------------------------------------------------------------------
+
+_CONV_MODES = ("auto", "bseg_conv2d", "bseg_conv1d", "im2col", "ref")
+
+
+def prepare_bseg_conv2d(w_int: jnp.ndarray, plan: BSEGPlan):
+    """[C_out, C_in, kh, kw] signed taps -> ([G, kh, C_in, C_out] int32
+    packed kernel-row factors, [C_out] tap sums).
+
+    Each kernel row of each (C_out, C_in) pair packs its kw taps into
+    ceil(kw/n_k) groups, reversed through the pre-adder; the tap sums
+    feed the zero-point correction.
+    """
+    c_out, c_in, kh, kw = w_int.shape
+    groups = -(-kw // plan.n_k)
+    wp = jnp.pad(w_int, ((0, 0), (0, 0), (0, 0),
+                         (0, groups * plan.n_k - kw)))
+    kappas = []
+    for gi in range(groups):
+        seg = wp[..., gi * plan.n_k:(gi + 1) * plan.n_k]
+        kappas.append(core_bseg.bseg_pack_kernel(seg, plan))
+    kappa = jnp.stack(kappas, axis=0).astype(jnp.int32)  # [G, C_out, C_in, kh]
+    kappa = jnp.transpose(kappa, (0, 3, 2, 1))           # [G, kh, C_in, C_out]
+    tap_sum = jnp.sum(w_int.astype(jnp.int32), axis=(1, 2, 3))
+    return kappa, tap_sum
+
+
+def _is_depthwise(x_shape, w_shape) -> bool:
+    c_out, c_in, kh, _ = w_shape
+    return c_in == 1 and kh == 1 and c_out == x_shape[-1]
+
+
+def select_conv_route(x_shape, w_shape, *, plan: BSEGPlan,
+                      use_kernel: bool = True, mode: str = "auto") -> str:
+    """Pick the kernel for a packed conv2d (the module-docstring table).
+
+    Pure function of (activation shape, weight shape, bitwidth plan,
+    backend capability) so the routing is testable without running any
+    kernel.  ``x_shape`` is [B, H, W, C_in]; ``w_shape`` is [C_out,
+    C_in, kh, kw].
+    """
+    if mode not in _CONV_MODES:
+        raise ValueError(f"unknown packed_conv2d mode {mode!r}")
+    c_out, c_in, kh, kw = w_shape
+    if x_shape[-1] != c_in and not _is_depthwise(x_shape, w_shape):
+        raise ValueError(
+            f"activation channels {x_shape[-1]} != weight C_in {c_in}")
+    if mode in ("bseg_conv2d", "bseg_conv1d", "im2col"):
+        if not plan.spec.exact_wrap:
+            raise ValueError(
+                f"mode {mode!r} needs exact-wrap arithmetic; datapath "
+                f"{plan.spec.name} rounds (fp32)")
+        if plan.w_i > 7:
+            raise ValueError(
+                f"mode {mode!r} stages activations in int8: plan.w_i "
+                f"must be <= 7, got {plan.w_i}")
+        if kh % 2 == 0 or kw % 2 == 0:
+            raise ValueError(
+                f"mode {mode!r} is stride-1 'same' pad: kh/kw must be "
+                f"odd, got {kh}x{kw}")
+        if mode == "bseg_conv1d" and not _is_depthwise(x_shape, w_shape):
+            raise ValueError(
+                "mode 'bseg_conv1d' needs a depthwise shape: C_in == 1, "
+                f"kh == 1, C_out == activation channels; got w {w_shape} "
+                f"on x {tuple(x_shape)}")
+        return mode
+    if mode == "ref":
+        return mode
+    # --- auto ---
+    if not use_kernel or not plan.spec.exact_wrap:
+        return "ref"
+    if kh % 2 == 0 or kw % 2 == 0:
+        return "ref"                     # even kernels: no 'same' pad
+    if _is_depthwise(x_shape, w_shape):
+        return "bseg_conv1d"
+    if kh == 1 and kw == 1:
+        return "im2col"                  # no spatial reuse -> GEMM
+    return "bseg_conv2d"
+
+
+def _im2col_sdv_plan(plan: BSEGPlan) -> SDVPlan:
+    """SDV plan matching the BSEG widths for the im2col route: signed
+    w_k-bit taps against signed (w_i+1)-bit activations — wide enough
+    for the unsigned w_i datapath domain AND the signed pre-shift
+    values, so no zero-point handling is needed on this route."""
+    from repro.core.datapath import plan_sdv
+    return plan_sdv(plan.spec, plan.w_k, plan.w_i + 1, signed_a=True,
+                    signed_b=True, park_sign_bits=True)
+
+
+def _im2col_patches(x32: jnp.ndarray, kh: int, kw: int) -> jnp.ndarray:
+    """[B, H, W, C] ints -> [B, H, W, kh*kw*C] 'same'-pad patches."""
+    if kh == 1 and kw == 1:
+        return x32
+    b, h, w, c = x32.shape
+    xp = jnp.pad(x32, ((0, 0), (kh // 2, kh // 2), (kw // 2, kw // 2),
+                       (0, 0)))
+    cols = [xp[:, r:r + h, q:q + w, :]
+            for r in range(kh) for q in range(kw)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def packed_conv2d(x: jnp.ndarray, w_int: jnp.ndarray, *, plan: BSEGPlan,
+                  mode: str = "auto", zero_point: int = 0,
+                  use_kernel: bool = True, block_h: int = 8,
+                  block_co: int = 128) -> jnp.ndarray:
+    """Stride-1 'same'-pad conv2d with kernel dispatch.
+
+    Args:
+      x: [B, H, W, C_in] integer activations; ``x + zero_point`` must
+        lie in the unsigned datapath domain [0, 2^w_i) (pass 0 when the
+        activations are already unsigned, e.g. post-requantization).
+      w_int: [C_out, C_in, kh, kw] signed taps within ``plan.w_k`` bits.
+      plan: BSEG plan (an exact-wrap datapath for the kernel routes).
+      mode: a row of the dispatch table, or ``"auto"``.
+      block_h / block_co: output-row / output-channel block sizes for
+        the conv2d kernel (downgraded to H / C_out when not divisible).
+
+    Returns:
+      [B, H, W, C_out] int32 — the exact signed-domain correlation
+      (identical to ``ref.conv2d_int_ref`` on every route).
+    """
+    if not jnp.issubdtype(x.dtype, jnp.integer):
+        raise ValueError(
+            f"packed_conv2d needs integer activations within "
+            f"plan.w_i={plan.w_i} bits (+zero_point), got {x.dtype}")
+    route = select_conv_route(x.shape, w_int.shape, plan=plan,
+                              use_kernel=use_kernel, mode=mode)
+    b, h, w, c_in = x.shape
+    c_out, _, kh, kw = w_int.shape
+
+    if route == "ref":
+        return ref.conv2d_int_ref(x, w_int)
+
+    if route == "bseg_conv1d":
+        taps = w_int[:, 0, 0, :]                             # [C, kw]
+        kappa, tap_sum = prepare_bseg_taps(taps, plan)
+        y = bseg_conv1d(x.reshape(b * h, w, c_in).astype(jnp.int8), kappa,
+                        tap_sum, plan=plan, n_taps=kw,
+                        zero_point=zero_point, padding="same",
+                        use_kernel=True)
+        return y.reshape(b, h, w, c_in)
+
+    if route == "im2col":
+        sdv_plan = _im2col_sdv_plan(plan)
+        patches = _im2col_patches(x.astype(jnp.int32), kh, kw)
+        w2 = w_int.astype(jnp.int32).transpose(0, 2, 3, 1) \
+            .reshape(c_out, kh * kw * c_in)
+        words = prepare_sdv_weights(w2, sdv_plan)
+        return packed_matmul(patches, words, plan=sdv_plan, m=c_out,
+                             use_kernel=True)
+
+    # bseg_conv2d
+    from . import bseg_conv2d as bseg2d_kernel
+    kappa, tap_sum = prepare_bseg_conv2d(w_int, plan)
+    n_groups = kappa.shape[0]
+    n_steps = -(-(w + plan.n_k - 1) // plan.n_i)
+    need = (n_steps - 1) * plan.n_i + (n_groups - 1) * plan.n_k + plan.n_i
+    pad_h, pad_w = kh // 2, kw // 2
+    xu = (x.astype(jnp.int32) + zero_point).astype(jnp.int8)
+    # the boundary pad is signed-zero = the zero point in the unsigned
+    # domain; extra right pad only feeds discarded outputs.
+    x_pad = jnp.pad(
+        xu, ((0, 0), (pad_h, pad_h),
+             (pad_w, max(pad_w, need - (w + pad_w))), (0, 0)),
+        constant_values=zero_point)
+    bh = min(block_h, h)
+    if h % bh:
+        bh = h
+    bco = min(block_co, c_out)
+    if c_out % bco:
+        bco = c_out
+    y = bseg2d_kernel.bseg_conv2d(x_pad, kappa, plan=plan, h_out=h,
+                                  w_out=w, bh=bh, bco=bco,
+                                  interpret=_on_cpu())
+    if zero_point:
+        y = y - zero_point * tap_sum[None, None, None, :]
     return y
 
 

@@ -6,6 +6,7 @@ packing at all — plain integer/float math.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -71,17 +72,45 @@ def sdv_unpack_words_ref(w_words: jnp.ndarray, *, plan) -> jnp.ndarray:
     return jnp.stack(vals, axis=-1).reshape(k, g * plan.n)
 
 
-def conv1d_causal_ref(x_int: jnp.ndarray, taps: jnp.ndarray) -> jnp.ndarray:
-    """Exact depthwise causal 1-D correlation.
+def conv1d_ref(x_int: jnp.ndarray, taps: jnp.ndarray,
+               left_pad: int) -> jnp.ndarray:
+    """Exact depthwise 1-D correlation with an explicit alignment.
 
     x [b, s, c] ints, taps [c, n] ints ->  y [b, s, c] i32 with
-    y[b, s, c] = sum_q taps[c, q] * x[b, s - (n-1) + q, c]  (left zero pad).
+    y[b, s, c] = sum_q taps[c, q] * x[b, s - left_pad + q, c]
+    (zero padding on both ends as needed).
     """
     n = taps.shape[-1]
+    s = x_int.shape[1]
     x32 = x_int.astype(jnp.int32)
-    xp = jnp.pad(x32, ((0, 0), (n - 1, 0), (0, 0)))
+    xp = jnp.pad(x32, ((0, 0), (left_pad, max(0, n - 1 - left_pad)), (0, 0)))
     y = jnp.zeros_like(x32)
     for q in range(n):
         y = y + taps[:, q][None, None, :].astype(jnp.int32) \
-            * xp[:, q:q + x_int.shape[1], :]
+            * xp[:, q:q + s, :]
+    return y
+
+
+def conv1d_causal_ref(x_int: jnp.ndarray, taps: jnp.ndarray) -> jnp.ndarray:
+    """Exact depthwise *causal* 1-D correlation (left zero pad n-1)."""
+    return conv1d_ref(x_int, taps, taps.shape[-1] - 1)
+
+
+def conv2d_int_ref(x_int: jnp.ndarray, w_int: jnp.ndarray) -> jnp.ndarray:
+    """Exact stride-1 'same'-pad integer conv2d (the conv oracle).
+
+    x [b, h, w, c_in] ints, w [c_out, c_in, kh, kw] ints -> [b, h, w,
+    c_out] i32.  Accumulates in int32 end to end
+    (``preferred_element_type``) so the oracle cannot drift on deep
+    accumulations the way a float32 conv + round would.
+    """
+    c_out, c_in, kh, kw = w_int.shape
+    groups = x_int.shape[-1] // c_in     # c_in == 1 -> depthwise
+    y = jax.lax.conv_general_dilated(
+        x_int.astype(jnp.int32),
+        w_int.astype(jnp.int32).transpose(2, 3, 1, 0),       # HWIO
+        (1, 1), [(kh // 2, kh // 2), (kw // 2, kw // 2)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+        preferred_element_type=jnp.int32)
     return y

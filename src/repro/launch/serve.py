@@ -3,10 +3,13 @@ the int8 KV cache — the deployment form of the paper's technique.
 
 ``--packed-compute sdv`` runs every 2-D projection on the SDV
 arithmetic datapath (batched decode GEMMs go through the
-``kernels/ops.packed_matmul`` dispatch layer); ``memory`` packs the
-weights in HBM only and lets XLA own the dequant+matmul fusion.
+``kernels/ops.packed_matmul`` dispatch layer) and — unless
+``--conv-datapath float`` — every SSM/Griffin short depthwise conv on
+the BSEG datapath (``BSEGConv`` containers through the packed-conv
+dispatch); ``memory`` packs the weights in HBM only and lets XLA own
+the dequant+matmul fusion.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
       --packed-compute sdv
 """
 from __future__ import annotations
@@ -31,11 +34,15 @@ def main():
                     default="sdv")
     ap.add_argument("--act-bits", type=int, default=8,
                     help="activation width on the SDV datapath")
+    ap.add_argument("--conv-datapath", choices=("bseg", "float"),
+                    default="bseg",
+                    help="short-conv execution under --packed-compute "
+                         "sdv: BSEG packed datapath or float math")
     args = ap.parse_args()
 
     from repro.configs.registry import get_arch
-    from repro.models import (decode_step, init_cache, init_params,
-                              serve_params, values, Rules)
+    from repro.models import (BSEGConv, decode_step, init_cache,
+                              init_params, serve_params, values, Rules)
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -44,7 +51,9 @@ def main():
     params = values(init_params(cfg, rules, jax.random.PRNGKey(0)))
     qparams = serve_params(params, bits=args.weight_bits, min_size=1024,
                            compute=args.packed_compute,
-                           act_bits=args.act_bits)
+                           act_bits=args.act_bits,
+                           conv_bseg=(args.packed_compute == "sdv"
+                                      and args.conv_datapath == "bseg"))
 
     smax = args.prompt_len + args.new_tokens
     cache = values(init_cache(cfg, rules, args.batch, smax))
@@ -52,7 +61,13 @@ def main():
     compute_note = (f"SDV W{args.weight_bits}A{args.act_bits} datapath"
                     if args.packed_compute == "sdv"
                     else f"packed W{args.weight_bits} memory")
-    print(f"{cfg.name}: {compute_note}, "
+    n_conv = sum(isinstance(leaf, BSEGConv)
+                 for leaf in jax.tree_util.tree_leaves(
+                     qparams, is_leaf=lambda v: isinstance(v, BSEGConv)))
+    conv_note = (f", {n_conv} BSEG-packed "
+                 f"W{min(args.weight_bits, 4)}A4 short convs"
+                 if n_conv else "")
+    print(f"{cfg.name}: {compute_note}{conv_note}, "
           f"{kv_note} KV cache, batch {args.batch}")
 
     rng = np.random.default_rng(0)

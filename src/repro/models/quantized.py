@@ -15,7 +15,11 @@ transparently dispatches on the container type, so ``decode_step``/
     decode/prefill GEMMs run on the packed arithmetic datapath
     (activations are dynamically quantized per row to ``plan.w_b``
     bits).  Kernels with more than 2 dims (MoE expert banks) keep the
-    memory packing.
+    memory packing.  The short depthwise conv of the SSM/Griffin blocks
+    becomes ``BSEGConv`` — taps BSEG-packed through the pre-adder,
+    executed via the ``kernels/ops`` packed-conv dispatch (activations
+    dynamically quantized to the unsigned ``plan.w_i``-bit domain with
+    a zero point, per Eqs. 9/10).
 
 See DESIGN.md §2 for when each mode wins.
 """
@@ -27,7 +31,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.datapath import INT32, SDVPlan, plan_sdv
+from repro.core.datapath import BSEGPlan, INT32, SDVPlan, plan_bseg, plan_sdv
 
 
 @dataclasses.dataclass
@@ -129,6 +133,96 @@ def sdv_matmul_apply(qw: SDVLinear, x: jnp.ndarray,
     return (y.astype(jnp.float32) * xs * qw.scale[None, :]).astype(x.dtype)
 
 
+@dataclasses.dataclass
+class BSEGConv:
+    """Arithmetic-packed short depthwise conv: ``kappa`` [G, C] int32
+    packed tap-group factors (pre-adder applied), ``tap_sum`` [C] i32
+    for the zero-point correction, per-channel weight ``scale`` [C]
+    f32, float ``bias`` [C]; executed via ``kernels/ops.bseg_conv1d``.
+    """
+    kappa: jnp.ndarray
+    tap_sum: jnp.ndarray
+    scale: jnp.ndarray
+    bias: jnp.ndarray
+    plan: BSEGPlan
+    taps: int
+
+
+jax.tree_util.register_dataclass(
+    BSEGConv, data_fields=["kappa", "tap_sum", "scale", "bias"],
+    meta_fields=["plan", "taps"])
+
+
+def default_bseg_plan(bits: int, act_bits: int = 4) -> BSEGPlan:
+    """The serving conv plan: ``bits``-wide signed taps against
+    ``act_bits``-wide unsigned inputs on the TPU int32 datapath."""
+    return plan_bseg(INT32, bits, act_bits)
+
+
+def pack_conv_bseg(conv_params: dict, plan: BSEGPlan) -> BSEGConv:
+    """{'w': [..., C, taps] float, 'b': [..., C]} -> BSEGConv (w_k-bit
+    symmetric per-channel tap quantization, BSEG-packed through the
+    pre-adder).  A leading layer-stack dim (scanned blocks) is kept on
+    every data field, so per-layer slicing under ``lax.scan`` yields
+    the per-layer container unchanged."""
+    from repro.kernels import ops
+    w, b = conv_params["w"], conv_params["b"]
+    assert w.ndim in (2, 3), w.shape
+    taps = w.shape[-1]
+    qmax = (1 << (plan.w_k - 1)) - 1
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(wf / scale), -qmax, qmax).astype(jnp.int32)
+    kappa, tap_sum = ops.prepare_bseg_taps(q.reshape(-1, taps), plan)
+    if w.ndim == 3:                      # [L, C, taps] stacked blocks
+        stack, c = w.shape[0], w.shape[1]
+        kappa = kappa.reshape(-1, stack, c).swapaxes(0, 1)   # [L, G, C]
+        tap_sum = tap_sum.reshape(stack, c)
+    return BSEGConv(kappa=kappa, tap_sum=tap_sum,
+                    scale=scale[..., 0].astype(jnp.float32),
+                    bias=b.astype(jnp.float32), plan=plan,
+                    taps=taps)
+
+
+def bseg_conv_apply(qc: BSEGConv, x: jnp.ndarray, *,
+                    state: Optional[jnp.ndarray] = None,
+                    use_kernel: Optional[bool] = None):
+    """x [B, S, C] float through the BSEG-packed causal depthwise conv.
+
+    Activations (history included) are dynamically quantized per call —
+    asymmetric, to the *unsigned* ``plan.w_i``-bit datapath domain with
+    zero point 2^(w_i - 1) — then the exact integer correlation runs
+    through the ``kernels/ops.bseg_conv1d`` dispatch; the two scales
+    and the tap sums dequantize.  Mirrors ``ssm.short_conv_apply``:
+    returns (y [B, S, C], new_state [B, taps-1, C]).
+    """
+    from repro.kernels import ops
+    if use_kernel is None:
+        use_kernel = jax.default_backend() != "cpu"
+    taps = qc.taps
+    if state is None:
+        state = jnp.zeros((x.shape[0], taps - 1, x.shape[2]), x.dtype)
+    xfull = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    xf = xfull.astype(jnp.float32)
+    lo = jnp.min(xf)
+    hi = jnp.max(xf)
+    levels = (1 << qc.plan.w_i) - 1
+    xs = jnp.maximum(hi - lo, 1e-6) / levels
+    zp = 1 << (qc.plan.w_i - 1)
+    xq_u = jnp.clip(jnp.round((xf - lo) / xs), 0, levels)
+    xq = (xq_u - zp).astype(jnp.int8)            # signed datapath input
+    y_int = ops.bseg_conv1d(xq, qc.kappa, qc.tap_sum, plan=qc.plan,
+                            n_taps=taps, zero_point=zp, padding="causal",
+                            use_kernel=use_kernel)[:, taps - 1:, :]
+    # sum_q w x = scale_w * xs * sum_q q*xq_u + lo * scale_w * sum_q q
+    ts = qc.tap_sum.astype(jnp.float32)
+    y = qc.scale * xs * (y_int.astype(jnp.float32) + zp * ts) \
+        + lo * qc.scale * ts + qc.bias
+    new_state = xfull[:, xfull.shape[1] - (taps - 1):, :]
+    return y.astype(x.dtype), new_state
+
+
 def materialize(pl, dtype=jnp.bfloat16) -> jnp.ndarray:
     """Unpack + dequantize -> [..., d_in, d_out] in ``dtype``."""
     if isinstance(pl, SDVLinear):
@@ -150,7 +244,7 @@ def materialize(pl, dtype=jnp.bfloat16) -> jnp.ndarray:
 
 
 def is_packed(x) -> bool:
-    return isinstance(x, (PackedLinear, SDVLinear))
+    return isinstance(x, (PackedLinear, SDVLinear, BSEGConv))
 
 
 def is_sdv(x) -> bool:
@@ -163,18 +257,24 @@ _SKIP_CONTAINERS = ("router", "conv", "proj_patches")
 
 def serve_params(params: Any, bits: int = 4,
                  min_size: int = 1 << 16, compute: str = "memory",
-                 act_bits: int = 8) -> Any:
+                 act_bits: int = 8,
+                 conv_bseg: Optional[bool] = None) -> Any:
     """Rewrite a parameter *value* tree for quantized packed serving.
 
     ``compute="memory"`` packs every eligible kernel as ``PackedLinear``
     (HBM lane words); ``compute="sdv"`` packs 2-D kernels as
     ``SDVLinear`` (arithmetic packing — the GEMMs execute on the SDV
     datapath via ``packed_matmul``), keeping memory packing for >2-D
-    expert banks.
+    expert banks, and — unless ``conv_bseg=False`` — the SSM/Griffin
+    short-conv containers as ``BSEGConv`` (the convs execute on the
+    BSEG datapath via the packed-conv dispatch).
     """
     if compute not in ("memory", "sdv"):
         raise ValueError(f"unknown packed compute mode {compute!r}")
     plan = default_sdv_plan(bits, act_bits) if compute == "sdv" else None
+    if conv_bseg is None:
+        conv_bseg = compute == "sdv"
+    conv_plan = default_bseg_plan(min(bits, 4)) if conv_bseg else None
 
     def quantize(v):
         if plan is not None and v.ndim == 2:
@@ -185,7 +285,11 @@ def serve_params(params: Any, bits: int = 4,
         if isinstance(tree, dict):
             out = {}
             for k, v in tree.items():
-                if k in _SKIP_CONTAINERS:
+                if k == "conv" and conv_plan is not None \
+                        and isinstance(v, dict) and "w" in v \
+                        and getattr(v["w"], "ndim", 0) in (2, 3):
+                    out[k] = pack_conv_bseg(v, conv_plan)
+                elif k in _SKIP_CONTAINERS:
                     out[k] = v
                 elif isinstance(v, dict):
                     out[k] = walk(v, k)

@@ -36,7 +36,14 @@ def short_conv_init(ini: Init, channels: int, taps: int):
 
 def short_conv_apply(params, x, *, state: Optional[jnp.ndarray] = None):
     """x [B, S, C].  ``state`` [B, taps-1, C] carries decode history.
-    Returns (y [B, S, C], new_state)."""
+    Returns (y [B, S, C], new_state).
+
+    ``serve_params(compute="sdv")`` replaces the container with a
+    ``BSEGConv`` — then the conv runs on the packed BSEG datapath.
+    """
+    from .quantized import BSEGConv, bseg_conv_apply
+    if isinstance(params, BSEGConv):
+        return bseg_conv_apply(params, x, state=state)
     taps = params["w"].shape[-1]
     if state is None:
         state = jnp.zeros((x.shape[0], taps - 1, x.shape[2]), x.dtype)

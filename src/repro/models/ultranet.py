@@ -3,11 +3,19 @@
 DAC-SDC 2020 object-detection CNN: 8 conv3x3 stages (4 with 2x2 maxpool)
 plus a 1x1 head, quantized W4A4.  Two execution paths:
 
-  * ``mode="ref"``   — exact integer conv via im2col matmul (oracle);
-  * ``mode="bseg"``  — every conv is decomposed into 1-D rows and run
-    through the BSEG packed datapath (core/bseg.py), i.e. the paper's
-    Fig. 6/7 architecture end to end; bit-exact vs the oracle, while
-    consuming ``density`` x fewer wide multiplies.
+  * ``mode="ref"``   — exact integer conv oracle (int32-accumulating
+    ``lax.conv_general_dilated`` — see ``kernels/ref.conv2d_int_ref``);
+  * ``mode="bseg"``  — every conv goes through the
+    ``kernels/ops.packed_conv2d`` dispatch layer: the 3x3 stages run on
+    the cross-channel BSEG conv2d Pallas kernel (one launch per conv —
+    the paper's Fig. 6/7 architecture end to end), the 1x1 head on the
+    SDV datapath via im2col; bit-exact vs the oracle, while consuming
+    ``density`` x fewer wide multiplies.
+
+``mode="bseg_jnp"`` keeps the seed broadcast-materialized pure-jnp
+emulation (one ``core/bseg.py`` scan per kernel row, activations
+broadcast to [B, H, C_out, C_in, W]) as a benchmark baseline ONLY — it
+is no longer on any hot path.
 
 Thresholding (FINN-style) is modeled as requantize->unsigned-int4
 activations, which is exactly the signed-kernel x unsigned-input regime
@@ -18,11 +26,11 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import INT32, plan_bseg, bseg_conv1d, bseg_num_multiplies
+from repro.kernels import ops, ref
 
 # (out_channels, kernel, pool_after)
 ULTRANET_LAYERS: List[Tuple[int, int, bool]] = [
@@ -32,6 +40,8 @@ ULTRANET_LAYERS: List[Tuple[int, int, bool]] = [
 HEAD_CHANNELS = 36          # 6 anchors x (4 box + 1 obj + 1 cls)
 W_BITS = 4
 A_BITS = 4
+
+ULTRANET_MODES = ("ref", "bseg", "bseg_jnp")
 
 
 @dataclasses.dataclass
@@ -61,30 +71,28 @@ def _requant_unsigned(acc: jnp.ndarray, bits: int = A_BITS) -> jnp.ndarray:
 
 
 def _conv2d_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-    """x [B, H, W, C_in] int, w [C_out, C_in, k, k] -> same-pad conv."""
-    k = w.shape[-1]
-    pad = k // 2
-    xf = x.astype(jnp.float32)
-    wf = w.astype(jnp.float32).transpose(2, 3, 1, 0)     # HWIO
-    y = jax.lax.conv_general_dilated(
-        xf, wf, (1, 1), [(pad, pad), (pad, pad)],
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return jnp.round(y).astype(jnp.int32)
+    """The bit-exactness oracle: integer-accumulating same-pad conv."""
+    return ref.conv2d_int_ref(x, w)
 
 
-def _conv2d_bseg(x: jnp.ndarray, w: jnp.ndarray, plan) -> jnp.ndarray:
-    """Same conv through the BSEG 1-D pipeline: a kxk conv is k row
-    convolutions summed (the paper's 'higher-dimensional convolutions
-    are sliced into individual 1D computations')."""
+def _conv2d_bseg(x: jnp.ndarray, w: jnp.ndarray, plan,
+                 use_kernel: bool = True) -> jnp.ndarray:
+    """Same conv through the packed_conv2d dispatch layer (activations
+    are already unsigned int4, so no zero-point shift is needed)."""
+    return ops.packed_conv2d(x, w, plan=plan, mode="auto",
+                             zero_point=0, use_kernel=use_kernel)
+
+
+def _conv2d_bseg_jnp(x: jnp.ndarray, w: jnp.ndarray, plan) -> jnp.ndarray:
+    """SEED BASELINE (benchmarks only): the conv through the pure-jnp
+    BSEG 1-D pipeline, one scan per kernel row with activations
+    broadcast-materialized to [B, H, C_out, C_in, W]."""
     b, hh, ww, cin = x.shape
     cout, _, kh, kw = w.shape
     pad = kh // 2
     xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-    # rows: for each (kh row, cin): 1-D conv along W, then sum
-    # vectorize: batch dims = (B, H_out rows, cin, cout over taps)
     total = jnp.zeros((b, hh, ww, cout), jnp.int32)
     for r in range(kh):
-        # input rows for this tap row: xp[:, y+r, :, :] for y in [0,hh)
         rows = xp[:, r:r + hh, :, :]                     # [B,hh,W+2p,cin]
         rows = jnp.moveaxis(rows, -1, 2)                 # [B,hh,cin,W+2p]
         rows_b = rows[:, :, None, :, :]                  # [B,hh,1,cin,Wp]
@@ -100,22 +108,54 @@ def _conv2d_bseg(x: jnp.ndarray, w: jnp.ndarray, plan) -> jnp.ndarray:
     return total
 
 
+def _conv2d(x, w, plan, mode: str, use_kernel: bool):
+    if mode == "ref":
+        return _conv2d_ref(x, w)
+    if mode == "bseg":
+        return _conv2d_bseg(x, w, plan, use_kernel)
+    if mode == "bseg_jnp":
+        return _conv2d_bseg_jnp(x, w, plan)
+    raise ValueError(f"unknown ultranet mode {mode!r}; "
+                     f"expected one of {ULTRANET_MODES}")
+
+
 def ultranet_forward(params: UltraNetParams, img_q: jnp.ndarray,
-                     *, mode: str = "ref"):
+                     *, mode: str = "ref", use_kernel: bool = True):
     """img_q: [B, H, W, 3] unsigned int4 values (int32 container).
     Returns head output [B, H/16, W/16, 36] int32."""
     plan = plan_bseg(INT32, W_BITS, A_BITS)
     x = img_q.astype(jnp.int32)
     for (cout, k, pool), w in zip(ULTRANET_LAYERS, params.convs):
-        acc = _conv2d_ref(x, w) if mode == "ref" \
-            else _conv2d_bseg(x, w, plan)
+        acc = _conv2d(x, w, plan, mode, use_kernel)
         x = _requant_unsigned(acc)
         if pool:
             b, hh, ww, c = x.shape
             x = x.reshape(b, hh // 2, 2, ww // 2, 2, c).max(axis=(2, 4))
-    acc = _conv2d_ref(x, params.head) if mode == "ref" \
-        else _conv2d_bseg(x, params.head, plan)
-    return acc
+    return _conv2d(x, params.head, plan, mode, use_kernel)
+
+
+def ultranet_layer_shapes(h: int, w: int, in_ch: int = 3):
+    """Per-conv activation/weight shapes at an ``h x w`` input frame:
+    [{'cin', 'cout', 'k', 'h', 'w'}] for the 8 stages + the head."""
+    shapes = []
+    cin, hh, ww = in_ch, h, w
+    for cout, k, pool in ULTRANET_LAYERS:
+        shapes.append({"cin": cin, "cout": cout, "k": k, "h": hh, "w": ww})
+        cin = cout
+        if pool:
+            hh, ww = hh // 2, ww // 2
+    shapes.append({"cin": cin, "cout": HEAD_CHANNELS, "k": 1,
+                   "h": hh, "w": ww})
+    return shapes
+
+
+def ultranet_conv_routes(h: int, w: int) -> List[str]:
+    """The packed_conv2d dispatch decision per conv at this frame."""
+    plan = plan_bseg(INT32, W_BITS, A_BITS)
+    return [ops.select_conv_route(
+        (1, s["h"], s["w"], s["cin"]),
+        (s["cout"], s["cin"], s["k"], s["k"]), plan=plan)
+        for s in ultranet_layer_shapes(h, w)]
 
 
 def ultranet_multiplies(h: int, w: int, *, mode: str) -> dict:
