@@ -1,8 +1,15 @@
-.PHONY: test dev-deps
+.PHONY: test dev-deps planner-smoke planner-test
 
 # tier-1 verify (ROADMAP.md): the whole suite, fail-fast, quiet
 test:
 	./scripts/ci.sh
+
+# mixed-precision planner: CLI smoke + its test file alone (fast loop)
+planner-smoke:
+	PYTHONPATH=src python -m repro.planner --arch ultranet --smoke
+
+planner-test: planner-smoke
+	PYTHONPATH=src python -m pytest -q tests/test_planner.py
 
 dev-deps:
 	pip install -r requirements-dev.txt

@@ -6,8 +6,11 @@ Interpret-mode wall time is NOT TPU performance — the derived column
 output; kernels are validated bit-exactly in tests/test_kernels.py.
 
 Standalone:  PYTHONPATH=src python benchmarks/kernelbench.py \
-                 [--json BENCH_2.json] [--size 32] [--smoke]
-writes the per-PR trajectory file (wall clock + multiply counts).
+                 [--json BENCH_3.json] [--size 32] [--smoke]
+writes the per-PR trajectory file (wall clock + multiply counts),
+including the planner section: the mixed-precision planned UltraNet
+frame (per-layer plans from ``repro.planner``) vs the uniform-default
+packed frame — wall clock, wide-multiply counts, and bit-exactness.
 """
 from __future__ import annotations
 
@@ -183,6 +186,53 @@ def packed_vs_naive():
     return rows
 
 
+def ultranet_planned_vs_default(size: int = 32, repeats: int = 2) -> dict:
+    """Mixed-precision planner (``repro.planner``) vs the uniform
+    default plan on the end-to-end UltraNet frame: wall clock through
+    the real dispatch, analytic wide-multiply totals, and the per-layer
+    plan table — the PR-3 acceptance payload."""
+    from repro import planner
+    from repro.models import ultranet as U
+    params = U.init_ultranet(0)
+    rng = np.random.default_rng(7)
+    img = jnp.asarray(rng.integers(0, 16, (1, size, size, 3)),
+                      dtype=jnp.int32)
+    choices = planner.plan_ultranet(size, first_layer_a_bits=8)
+    defaults = planner.plan_ultranet(size, policy="default",
+                                     first_layer_a_bits=8)
+    t_planned = _t(lambda: U.ultranet_forward(params, img, mode="bseg",
+                                              plans=choices), n=repeats)
+    t_default = _t(lambda: U.ultranet_forward(params, img, mode="bseg"),
+                   n=repeats)
+    y_ref = U.ultranet_forward(params, img, mode="ref")
+    y_planned = U.ultranet_forward(params, img, mode="bseg",
+                                   plans=choices)
+    wide_planned = sum(c.cost.wide_multiplies for c in choices)
+    wide_default = sum(c.cost.wide_multiplies for c in defaults)
+    macs = sum(c.cost.macs for c in choices)
+    return {
+        "frame": [size, size],
+        "bit_exact_vs_integer_oracle":
+            bool((np.asarray(y_ref) == np.asarray(y_planned)).all()),
+        "wall_us_planned": t_planned,
+        "wall_us_default_plan": t_default,
+        "speedup_vs_default_plan": t_default / max(t_planned, 1e-9),
+        "wide_multiplies_planned": wide_planned,
+        "wide_multiplies_default_plan": wide_default,
+        "density_planned": macs / max(wide_planned, 1),
+        "density_default_plan": macs / max(wide_default, 1),
+        "layers": [{
+            "name": c.layer.name,
+            "bits": f"w{c.layer.w_bits}a{c.layer.a_bits}",
+            "plan": planner.describe_plan(c.plan),
+            "datapath": c.plan.spec.name,
+            "route": c.cost.route,
+            "differs_from_default":
+                planner.plan_differs_from_default(c),
+        } for c in choices],
+    }
+
+
 # ---------------------------------------------------------------------------
 # --json trajectory file (BENCH_<pr>.json)
 # ---------------------------------------------------------------------------
@@ -198,10 +248,12 @@ def bench_json(path: str, *, size: int = 32, repeats: int = 3) -> dict:
                packed_vs_naive):
         rows.extend(fn())
     payload = {
-        "pr": 2,
+        "pr": 3,
         "rows": [{"name": n, "us_per_call": us, "derived": str(d)}
                  for n, us, d in rows],
         "ultranet": ultranet_frame(size, repeats=max(1, repeats - 1)),
+        "planner": ultranet_planned_vs_default(
+            size, repeats=max(1, repeats - 1)),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
@@ -212,7 +264,7 @@ def main() -> None:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", default="BENCH_2.json",
+    ap.add_argument("--json", default="BENCH_3.json",
                     help="trajectory file to write")
     ap.add_argument("--size", type=int, default=32,
                     help="UltraNet bench frame size")
@@ -225,12 +277,21 @@ def main() -> None:
     repeats = 1 if args.smoke else 3
     payload = bench_json(args.json, size=size, repeats=repeats)
     u = payload["ultranet"]
+    p = payload["planner"]
     print(f"wrote {args.json}: UltraNet {size}x{size} frame "
           f"packed-kernel {u['wall_us_packed_kernel'] / 1e3:.1f}ms vs "
           f"seed-jnp {u['wall_us_seed_jnp'] / 1e3:.1f}ms "
           f"({u['speedup_vs_seed']:.1f}x), bit-exact: "
           f"{u['bit_exact_vs_integer_oracle']}, density(416): "
           f"{u['multiplies_416']['density_achieved']:.2f} MACs/multiply")
+    print(f"planner: planned frame {p['wall_us_planned'] / 1e3:.1f}ms vs "
+          f"default-plan {p['wall_us_default_plan'] / 1e3:.1f}ms "
+          f"({p['speedup_vs_default_plan']:.2f}x), density "
+          f"{p['density_planned']:.2f} vs "
+          f"{p['density_default_plan']:.2f} MACs/multiply, bit-exact: "
+          f"{p['bit_exact_vs_integer_oracle']}, "
+          f"{sum(l['differs_from_default'] for l in p['layers'])}/"
+          f"{len(p['layers'])} layers re-planned")
 
 
 if __name__ == "__main__":

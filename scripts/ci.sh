@@ -5,8 +5,20 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# planner smoke: the mixed-precision plan table must build for the
+# paper's evaluation model
+python -m repro.planner --arch ultranet --smoke
 # bench smoke: the kernel benchmarks must RUN on tiny shapes (the
 # trajectory JSON goes to a scratch path, not the tracked BENCH_<pr>)
-python benchmarks/kernelbench.py --smoke \
-    --json "${TMPDIR:-/tmp}/bench_smoke.json"
+BENCH_SMOKE="${TMPDIR:-/tmp}/bench_smoke.json"
+python benchmarks/kernelbench.py --smoke --json "$BENCH_SMOKE"
+# ... and the BENCH_<pr> payload must be well-formed JSON with the
+# planner comparison section
+python - "$BENCH_SMOKE" <<'PY'
+import json, sys
+payload = json.load(open(sys.argv[1]))
+assert payload["planner"]["bit_exact_vs_integer_oracle"] is True, payload
+assert payload["planner"]["layers"], "planner section missing layers"
+print(f"bench smoke JSON ok ({len(payload['rows'])} rows + planner)")
+PY
 exec python -m pytest -x -q "$@"

@@ -22,14 +22,21 @@ Dispatch table for ``packed_matmul`` (mode -> kernel -> constraints):
                  in-kernel)                  int32 + scale      ``w_bits`` given
   ref            pure jnp (XLA owns fusion)  either             always available; selected in
                                                                 auto when ``use_kernel`` is
-                                                                False or the datapath is not
+                                                                False, the datapath is not
                                                                 exact-wrap (fp32m rounds, so
-                                                                SDV spill tracking is invalid)
+                                                                SDV spill tracking is invalid),
+                                                                or the datapath word exceeds
+                                                                the kernels' int32 storage
+                                                                (dsp48e2/dsp58 emulation is
+                                                                int64 jnp-only)
 
 ``mode="auto"`` picks the first row that satisfies its constraints, in
 the order ref-conditions -> sdv_matvec/sdv_matmul (by batch rows) ->
 quant_matmul (no plan).  Explicit modes raise ``ValueError`` when their
-constraints cannot be met rather than silently falling back.
+constraints cannot be met rather than silently falling back.  Both
+route selectors take ``explain=True`` to also return the *reason* for
+the decision — the planner cost model (``repro.planner.cost``) and the
+serve-time fallback log are built on it.
 
 Dispatch table for ``packed_conv2d`` (mode -> kernel -> constraints):
 
@@ -49,11 +56,17 @@ Dispatch table for ``packed_conv2d`` (mode -> kernel -> constraints):
                  ``packed_matmul`` (SDV      in jnp, compute on the SDV
                  plan derived from the       datapath; odd kh and kw
                  BSEG widths: signed
-                 w_i+1-bit activations)
+                 w_i+1-bit activations —
+                 or a planner-chosen
+                 ``sdv_plan`` override)
   ref            pure jnp integer conv       always available; selected
                  (XLA owns the fusion)       in auto when ``use_kernel``
-                                             is False or the datapath is
-                                             not exact-wrap
+                                             is False, the datapath is
+                                             not exact-wrap, the word
+                                             exceeds int32 storage, or
+                                             ``plan.w_i > 7`` (the
+                                             kernels stage activations
+                                             in int8)
 
 ``mode="auto"`` routes ref-conditions -> bseg_conv1d (depthwise shape)
 -> im2col (1x1 kernels — a conv with no spatial reuse is a GEMM) ->
@@ -186,13 +199,20 @@ _PACKED_MODES = ("auto", "sdv_matmul", "sdv_matvec", "quant_matmul", "ref")
 
 
 def select_packed_route(rows: int, *, plan: Optional[SDVPlan] = None,
-                        use_kernel: bool = True,
-                        mode: str = "auto") -> str:
+                        use_kernel: bool = True, mode: str = "auto",
+                        explain: bool = False):
     """Pick the kernel for a packed matmul (the module-docstring table).
 
     Pure function of (batch rows, bitwidth plan, backend capability) so
-    the routing itself is testable without running any kernel.
+    the routing itself is testable without running any kernel.  With
+    ``explain=True`` returns ``(route, reason)`` instead of the bare
+    route name — the reason string says why the route was chosen, which
+    is what the planner cost model penalizes (a ref fallback means the
+    plan never reaches the packed datapath).
     """
+    def _r(route: str, reason: str):
+        return (route, reason) if explain else route
+
     if mode not in _PACKED_MODES:
         raise ValueError(f"unknown packed_matmul mode {mode!r}")
     if mode in ("sdv_matmul", "sdv_matvec"):
@@ -202,27 +222,51 @@ def select_packed_route(rows: int, *, plan: Optional[SDVPlan] = None,
             raise ValueError(
                 f"mode {mode!r} needs exact-wrap arithmetic; datapath "
                 f"{plan.spec.name} rounds (fp32)")
+        if plan.spec.w_word > 32:
+            raise ValueError(
+                f"mode {mode!r} stores int32 words; the {plan.spec.name} "
+                f"datapath needs {plan.spec.w_word}-bit words (int64 "
+                f"emulation lives in core/, jnp only)")
         if mode == "sdv_matvec" and not plan.signed_a:
             raise ValueError(
                 "the GEMV kernel stores signed elements only (parked "
                 "sign bits); use sdv_matmul for unsigned plans")
-        return mode
+        return _r(mode, "explicitly requested")
     if mode == "quant_matmul":
         if plan is not None:
             raise ValueError(
                 "mode 'quant_matmul' takes memory-packed lane words, "
                 "not an SDV plan")
-        return mode
+        return _r(mode, "explicitly requested")
     if mode == "ref":
-        return mode
+        return _r(mode, "explicitly requested")
     # --- auto ---
     if plan is None:
-        return "quant_matmul" if use_kernel else "ref"
-    if not use_kernel or not plan.spec.exact_wrap:
-        return "ref"
+        if use_kernel:
+            return _r("quant_matmul",
+                      "no SDV plan: memory-packed lane words")
+        return _r("ref", "no Pallas backend (use_kernel=False)")
+    if not use_kernel:
+        return _r("ref", "no Pallas backend (use_kernel=False)")
+    if not plan.spec.exact_wrap:
+        return _r("ref", f"datapath {plan.spec.name} rounds (fp32): "
+                         "SDV spill-over tracking is invalid")
+    if plan.spec.w_word > 32:
+        return _r("ref", f"datapath {plan.spec.name} needs "
+                         f"{plan.spec.w_word}-bit storage words: the "
+                         "Pallas kernels are int32 (int64 emulation is "
+                         "jnp-only)")
     if rows <= GEMV_MAX_ROWS and plan.signed_a:
-        return "sdv_matvec"
-    return "sdv_matmul"
+        return _r("sdv_matvec",
+                  f"{rows} rows <= GEMV_MAX_ROWS={GEMV_MAX_ROWS}: "
+                  "decode-micro-batch GEMV blocks")
+    if rows <= GEMV_MAX_ROWS:
+        return _r("sdv_matmul",
+                  "unsigned elements: the GEMV kernel stores signed "
+                  "elements only")
+    return _r("sdv_matmul",
+              f"{rows} rows > GEMV_MAX_ROWS={GEMV_MAX_ROWS}: "
+              "blocked batched GEMM")
 
 
 def packed_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
@@ -389,14 +433,19 @@ def _is_depthwise(x_shape, w_shape) -> bool:
 
 
 def select_conv_route(x_shape, w_shape, *, plan: BSEGPlan,
-                      use_kernel: bool = True, mode: str = "auto") -> str:
+                      use_kernel: bool = True, mode: str = "auto",
+                      explain: bool = False):
     """Pick the kernel for a packed conv2d (the module-docstring table).
 
     Pure function of (activation shape, weight shape, bitwidth plan,
     backend capability) so the routing is testable without running any
     kernel.  ``x_shape`` is [B, H, W, C_in]; ``w_shape`` is [C_out,
-    C_in, kh, kw].
+    C_in, kh, kw].  With ``explain=True`` returns ``(route, reason)``
+    — see ``select_packed_route``.
     """
+    def _r(route: str, reason: str):
+        return (route, reason) if explain else route
+
     if mode not in _CONV_MODES:
         raise ValueError(f"unknown packed_conv2d mode {mode!r}")
     c_out, c_in, kh, kw = w_shape
@@ -408,6 +457,11 @@ def select_conv_route(x_shape, w_shape, *, plan: BSEGPlan,
             raise ValueError(
                 f"mode {mode!r} needs exact-wrap arithmetic; datapath "
                 f"{plan.spec.name} rounds (fp32)")
+        if plan.spec.w_word > 32:
+            raise ValueError(
+                f"mode {mode!r} packs int32 kernel factors; the "
+                f"{plan.spec.name} datapath needs {plan.spec.w_word}-bit "
+                f"words (int64 emulation lives in core/, jnp only)")
         if plan.w_i > 7:
             raise ValueError(
                 f"mode {mode!r} stages activations in int8: plan.w_i "
@@ -421,19 +475,60 @@ def select_conv_route(x_shape, w_shape, *, plan: BSEGPlan,
                 "mode 'bseg_conv1d' needs a depthwise shape: C_in == 1, "
                 f"kh == 1, C_out == activation channels; got w {w_shape} "
                 f"on x {tuple(x_shape)}")
-        return mode
+        return _r(mode, "explicitly requested")
     if mode == "ref":
-        return mode
+        return _r(mode, "explicitly requested")
     # --- auto ---
-    if not use_kernel or not plan.spec.exact_wrap:
-        return "ref"
+    if not use_kernel:
+        return _r("ref", "no Pallas backend (use_kernel=False)")
+    if not plan.spec.exact_wrap:
+        return _r("ref", f"datapath {plan.spec.name} rounds (fp32): "
+                         "guard-bit extraction needs exact bits "
+                         "(the ROADMAP FP32M conv gap)")
+    if plan.spec.w_word > 32:
+        return _r("ref", f"datapath {plan.spec.name} needs "
+                         f"{plan.spec.w_word}-bit words: the conv "
+                         "kernels are int32 (the ROADMAP int64 conv "
+                         "gap)")
+    if plan.w_i > 7:
+        return _r("ref", f"plan.w_i={plan.w_i} > 7: the conv kernels "
+                         "stage activations in int8")
     if kh % 2 == 0 or kw % 2 == 0:
-        return "ref"                     # even kernels: no 'same' pad
+        return _r("ref", f"even kernel {kh}x{kw}: no stride-1 'same' "
+                         "pad")
     if _is_depthwise(x_shape, w_shape):
-        return "bseg_conv1d"
+        return _r("bseg_conv1d",
+                  "depthwise shape: channels ride the VPU lanes")
     if kh == 1 and kw == 1:
-        return "im2col"                  # no spatial reuse -> GEMM
-    return "bseg_conv2d"
+        return _r("im2col", "1x1 kernel: no spatial reuse -> GEMM on "
+                            "the SDV datapath")
+    return _r("bseg_conv2d",
+              "dense kxk conv: one cross-channel kernel launch")
+
+
+def select_conv1d_route(plan: BSEGPlan, *, use_kernel: bool = True,
+                        explain: bool = False):
+    """Route for the *causal* depthwise short conv (``bseg_conv1d``
+    called directly, e.g. the ``BSEGConv`` serving container): no
+    odd-taps 'same'-pad constraint, only the datapath gates.  Shares
+    the gate conditions with ``select_conv_route`` so the planner cost
+    model and the dispatch can never disagree."""
+    def _r(route: str, reason: str):
+        return (route, reason) if explain else route
+
+    if not use_kernel:
+        return _r("ref", "no Pallas backend (use_kernel=False)")
+    if not plan.spec.exact_wrap:
+        return _r("ref", f"datapath {plan.spec.name} rounds (fp32): "
+                         "guard-bit extraction needs exact bits")
+    if plan.spec.w_word > 32:
+        return _r("ref", f"datapath {plan.spec.name} needs "
+                         f"{plan.spec.w_word}-bit words: the conv "
+                         "kernels are int32")
+    if plan.w_i > 7:
+        return _r("ref", f"plan.w_i={plan.w_i} > 7: the conv kernels "
+                         "stage activations in int8")
+    return _r("bseg_conv1d", "causal depthwise short conv")
 
 
 def _im2col_sdv_plan(plan: BSEGPlan) -> SDVPlan:
@@ -461,7 +556,8 @@ def _im2col_patches(x32: jnp.ndarray, kh: int, kw: int) -> jnp.ndarray:
 def packed_conv2d(x: jnp.ndarray, w_int: jnp.ndarray, *, plan: BSEGPlan,
                   mode: str = "auto", zero_point: int = 0,
                   use_kernel: bool = True, block_h: int = 8,
-                  block_co: int = 128) -> jnp.ndarray:
+                  block_co: int = 128,
+                  sdv_plan: Optional[SDVPlan] = None) -> jnp.ndarray:
     """Stride-1 'same'-pad conv2d with kernel dispatch.
 
     Args:
@@ -473,6 +569,11 @@ def packed_conv2d(x: jnp.ndarray, w_int: jnp.ndarray, *, plan: BSEGPlan,
       mode: a row of the dispatch table, or ``"auto"``.
       block_h / block_co: output-row / output-channel block sizes for
         the conv2d kernel (downgraded to H / C_out when not divisible).
+      sdv_plan: optional SDV plan for the im2col route (the planner
+        picks one per layer); defaults to the plan derived from the
+        BSEG widths.  An unsigned-element-domain override
+        (``signed_b=False``) is only valid with ``zero_point == 0``
+        (the pre-shift signed values would leave the domain).
 
     Returns:
       [B, H, W, C_out] int32 — the exact signed-domain correlation
@@ -482,6 +583,10 @@ def packed_conv2d(x: jnp.ndarray, w_int: jnp.ndarray, *, plan: BSEGPlan,
         raise ValueError(
             f"packed_conv2d needs integer activations within "
             f"plan.w_i={plan.w_i} bits (+zero_point), got {x.dtype}")
+    if sdv_plan is not None and not sdv_plan.signed_b and zero_point:
+        raise ValueError(
+            "an unsigned-multiplier sdv_plan needs zero_point == 0: "
+            "the im2col route feeds the pre-shift signed activations")
     route = select_conv_route(x.shape, w_int.shape, plan=plan,
                               use_kernel=use_kernel, mode=mode)
     b, h, w, c_in = x.shape
@@ -500,7 +605,8 @@ def packed_conv2d(x: jnp.ndarray, w_int: jnp.ndarray, *, plan: BSEGPlan,
         return y.reshape(b, h, w, c_in)
 
     if route == "im2col":
-        sdv_plan = _im2col_sdv_plan(plan)
+        if sdv_plan is None:
+            sdv_plan = _im2col_sdv_plan(plan)
         patches = _im2col_patches(x.astype(jnp.int32), kh, kw)
         w2 = w_int.astype(jnp.int32).transpose(0, 2, 3, 1) \
             .reshape(c_out, kh * kw * c_in)

@@ -25,7 +25,11 @@ import numpy as np
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b")
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # BooleanOptionalAction so --no-smoke actually disables it (the old
+    # store_true + default=True flag could never be turned off)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced config (--no-smoke runs full size)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--new-tokens", type=int, default=24)
@@ -38,6 +42,13 @@ def main():
                     default="bseg",
                     help="short-conv execution under --packed-compute "
                          "sdv: BSEG packed datapath or float math")
+    ap.add_argument("--plan-policy", choices=("default", "auto", "cache"),
+                    default="default",
+                    help="lane-plan selection: the uniform default "
+                         "plans, the per-layer mixed-precision planner "
+                         "(repro.planner), or the persisted plan cache")
+    ap.add_argument("--plan-cache", default=None,
+                    help="plan-cache JSON path for --plan-policy cache")
     args = ap.parse_args()
 
     from repro.configs.registry import get_arch
@@ -53,12 +64,15 @@ def main():
                            compute=args.packed_compute,
                            act_bits=args.act_bits,
                            conv_bseg=(args.packed_compute == "sdv"
-                                      and args.conv_datapath == "bseg"))
+                                      and args.conv_datapath == "bseg"),
+                           plan_policy=args.plan_policy,
+                           plan_cache=args.plan_cache)
 
     smax = args.prompt_len + args.new_tokens
     cache = values(init_cache(cfg, rules, args.batch, smax))
     kv_note = "int8" if "k_scale" in cache else "bf16"
     compute_note = (f"SDV W{args.weight_bits}A{args.act_bits} datapath"
+                    f" (plans: {args.plan_policy})"
                     if args.packed_compute == "sdv"
                     else f"packed W{args.weight_bits} memory")
     n_conv = sum(isinstance(leaf, BSEGConv)

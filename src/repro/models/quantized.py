@@ -255,10 +255,16 @@ _QUANT_LEAF_NAMES = ("kernel", "wi_gate", "wi_up", "wo")
 _SKIP_CONTAINERS = ("router", "conv", "proj_patches")
 
 
+#: decode micro-batch rows the planner dimensions matmul layers for
+PLANNER_DECODE_ROWS = 8
+
+
 def serve_params(params: Any, bits: int = 4,
                  min_size: int = 1 << 16, compute: str = "memory",
                  act_bits: int = 8,
-                 conv_bseg: Optional[bool] = None) -> Any:
+                 conv_bseg: Optional[bool] = None,
+                 plan_policy: str = "default",
+                 plan_cache: Optional[str] = None) -> Any:
     """Rewrite a parameter *value* tree for quantized packed serving.
 
     ``compute="memory"`` packs every eligible kernel as ``PackedLinear``
@@ -268,34 +274,107 @@ def serve_params(params: Any, bits: int = 4,
     expert banks, and — unless ``conv_bseg=False`` — the SSM/Griffin
     short-conv containers as ``BSEGConv`` (the convs execute on the
     BSEG datapath via the packed-conv dispatch).
+
+    ``plan_policy`` selects the lane plans under ``compute="sdv"``:
+    ``"default"`` keeps the uniform ``default_sdv_plan`` /
+    ``default_bseg_plan``; ``"auto"`` searches per layer shape through
+    the mixed-precision planner (``repro.planner``, DESIGN.md
+    §Planner); ``"cache"`` additionally reuses/persists choices in the
+    JSON plan cache at ``plan_cache`` (default ``$REPRO_PLAN_CACHE``).
+    Any layer whose chosen plan would still land on the pure-jnp ref
+    route is surfaced once per shape via ``warnings.warn`` instead of
+    silently degrading.
     """
     if compute not in ("memory", "sdv"):
         raise ValueError(f"unknown packed compute mode {compute!r}")
-    plan = default_sdv_plan(bits, act_bits) if compute == "sdv" else None
+    if plan_policy not in ("default", "auto", "cache"):
+        raise ValueError(f"unknown plan policy {plan_policy!r}")
+    sdv_mode = compute == "sdv"
+    if plan_policy != "default" and not sdv_mode:
+        raise ValueError(
+            f"plan_policy={plan_policy!r} plans arithmetic-packing "
+            f"lane plans, which only exist under compute='sdv' — "
+            f"memory packing has no plan to choose")
+    # the uniform default plan is only *required* under the default
+    # policy — the planner can still find a (possibly wider-datapath)
+    # plan for bit configs the INT32 default cannot pack
+    plan = default_sdv_plan(bits, act_bits) \
+        if sdv_mode and plan_policy == "default" else None
     if conv_bseg is None:
-        conv_bseg = compute == "sdv"
+        conv_bseg = sdv_mode
     conv_plan = default_bseg_plan(min(bits, 4)) if conv_bseg else None
 
-    def quantize(v):
-        if plan is not None and v.ndim == 2:
-            return pack_linear_sdv(v, plan)
+    planner_ctx = None
+    if plan_policy != "default" and sdv_mode:
+        from repro import planner as _planner
+        cache = _planner.PlanCache.load(plan_cache) \
+            if plan_policy == "cache" else None
+        planner_ctx = {"mod": _planner, "cache": cache, "memo": {},
+                       "warned": set()}
+
+    def _choose(layer):
+        ctx = planner_ctx
+        mk = layer.key()
+        if mk not in ctx["memo"]:
+            choice = None
+            if ctx["cache"] is not None:
+                choice = ctx["cache"].get_choice(layer)
+            if choice is None:
+                choice = ctx["mod"].choose_plan(layer)
+                if ctx["cache"] is not None:
+                    ctx["cache"].put_choice(choice, source="analytic")
+            ctx["memo"][mk] = choice
+        choice = ctx["memo"][mk]
+        if choice.cost.route == "ref" and mk not in ctx["warned"]:
+            ctx["warned"].add(mk)
+            import warnings
+            warnings.warn(
+                f"serve_params: layer {layer.name!r} ({mk}) lands on "
+                f"the pure-jnp ref route — {choice.cost.reason}",
+                stacklevel=2)
+        return choice.plan
+
+    def layer_plan(name, v):
+        """The SDV plan for one 2-D kernel leaf."""
+        if planner_ctx is None:
+            return plan
+        layer = planner_ctx["mod"].matmul_spec(
+            name, PLANNER_DECODE_ROWS, v.shape[0], v.shape[1],
+            w_bits=bits, a_bits=act_bits)
+        return _choose(layer)
+
+    def conv_layer_plan(name, w):
+        """The BSEG plan for one short-conv container."""
+        if planner_ctx is None:
+            return conv_plan
+        layer = planner_ctx["mod"].conv1d_spec(
+            name, w.shape[-2], w.shape[-1], w_bits=min(bits, 4),
+            a_bits=4, rows=PLANNER_DECODE_ROWS)
+        chosen = _choose(layer)
+        return chosen if isinstance(chosen, BSEGPlan) else conv_plan
+
+    def quantize(v, name="kernel"):
+        if sdv_mode and v.ndim == 2:
+            return pack_linear_sdv(v, layer_plan(name, v))
         return pack_linear(v, bits)
 
     def walk(tree, name):
         if isinstance(tree, dict):
             out = {}
             for k, v in tree.items():
+                path = f"{name}/{k}" if name else k
                 if k == "conv" and conv_plan is not None \
                         and isinstance(v, dict) and "w" in v \
                         and getattr(v["w"], "ndim", 0) in (2, 3):
-                    out[k] = pack_conv_bseg(v, conv_plan)
+                    out[k] = pack_conv_bseg(v, conv_layer_plan(path,
+                                                               v["w"]))
                 elif k in _SKIP_CONTAINERS:
                     out[k] = v
                 elif isinstance(v, dict):
-                    out[k] = walk(v, k)
+                    out[k] = walk(v, path)
                 elif k in _QUANT_LEAF_NAMES and hasattr(v, "ndim") \
                         and v.ndim >= 2 and v.size >= min_size:
-                    out[k] = quantize(v)
+                    out[k] = quantize(v, path)
                 else:
                     out[k] = v
             return out
@@ -305,7 +384,9 @@ def serve_params(params: Any, bits: int = 4,
     # the LM head is a plain array leaf at top level
     if isinstance(out, dict) and "lm_head" in out \
             and not is_packed(out["lm_head"]):
-        out["lm_head"] = quantize(out["lm_head"])
+        out["lm_head"] = quantize(out["lm_head"], "lm_head")
+    if planner_ctx is not None and planner_ctx["cache"] is not None:
+        planner_ctx["cache"].save()
     return out
 
 

@@ -24,12 +24,13 @@ of Eqs. 9/10.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import INT32, plan_bseg, bseg_conv1d, bseg_num_multiplies
+from repro.core.datapath import BSEGPlan, SDVPlan
 from repro.kernels import ops, ref
 
 # (out_channels, kernel, pool_after)
@@ -83,6 +84,23 @@ def _conv2d_bseg(x: jnp.ndarray, w: jnp.ndarray, plan,
                              zero_point=0, use_kernel=use_kernel)
 
 
+def _conv2d_planned(x: jnp.ndarray, w: jnp.ndarray, chosen, base_plan,
+                    use_kernel: bool = True) -> jnp.ndarray:
+    """One conv on its planner-chosen plan (``repro.planner`` output:
+    a ``PlanChoice`` or a bare plan).  A BSEG choice dispatches as
+    usual; an SDV choice forces the im2col route with the chosen plan
+    (a conv with a per-layer SDV packing is a GEMM on that datapath)."""
+    plan = getattr(chosen, "plan", chosen)
+    if isinstance(plan, SDVPlan):
+        return ops.packed_conv2d(x, w, plan=base_plan, mode="im2col",
+                                 zero_point=0, use_kernel=use_kernel,
+                                 sdv_plan=plan)
+    if not isinstance(plan, BSEGPlan):
+        raise TypeError(f"not a packing plan: {chosen!r}")
+    return ops.packed_conv2d(x, w, plan=plan, mode="auto",
+                             zero_point=0, use_kernel=use_kernel)
+
+
 def _conv2d_bseg_jnp(x: jnp.ndarray, w: jnp.ndarray, plan) -> jnp.ndarray:
     """SEED BASELINE (benchmarks only): the conv through the pure-jnp
     BSEG 1-D pipeline, one scan per kernel row with activations
@@ -108,7 +126,9 @@ def _conv2d_bseg_jnp(x: jnp.ndarray, w: jnp.ndarray, plan) -> jnp.ndarray:
     return total
 
 
-def _conv2d(x, w, plan, mode: str, use_kernel: bool):
+def _conv2d(x, w, plan, mode: str, use_kernel: bool, chosen=None):
+    if chosen is not None and mode == "bseg":
+        return _conv2d_planned(x, w, chosen, plan, use_kernel)
     if mode == "ref":
         return _conv2d_ref(x, w)
     if mode == "bseg":
@@ -120,18 +140,36 @@ def _conv2d(x, w, plan, mode: str, use_kernel: bool):
 
 
 def ultranet_forward(params: UltraNetParams, img_q: jnp.ndarray,
-                     *, mode: str = "ref", use_kernel: bool = True):
+                     *, mode: str = "ref", use_kernel: bool = True,
+                     plans: Optional[Sequence] = None):
     """img_q: [B, H, W, 3] unsigned int4 values (int32 container).
-    Returns head output [B, H/16, W/16, 36] int32."""
+    Returns head output [B, H/16, W/16, 36] int32.
+
+    ``plans`` (``mode="bseg"`` only) routes each of the 9 convs on its
+    own planner-chosen plan (``repro.planner.plan_ultranet`` output —
+    ``PlanChoice``s or bare plans); ``None`` keeps the uniform W4A4
+    default plan on every layer.  Any feasible plan covers the int4
+    data, so the output stays bit-exact vs ``mode="ref"`` either way.
+    """
     plan = plan_bseg(INT32, W_BITS, A_BITS)
+    n_convs = len(ULTRANET_LAYERS) + 1
+    if plans is not None:
+        if mode != "bseg":
+            raise ValueError("per-layer plans only apply to mode='bseg'")
+        if len(plans) != n_convs:
+            raise ValueError(f"need {n_convs} per-layer plans "
+                             f"(8 stages + head), got {len(plans)}")
+    chosen = plans if plans is not None else [None] * n_convs
     x = img_q.astype(jnp.int32)
-    for (cout, k, pool), w in zip(ULTRANET_LAYERS, params.convs):
-        acc = _conv2d(x, w, plan, mode, use_kernel)
+    for (cout, k, pool), w, ch in zip(ULTRANET_LAYERS, params.convs,
+                                      chosen):
+        acc = _conv2d(x, w, plan, mode, use_kernel, chosen=ch)
         x = _requant_unsigned(acc)
         if pool:
             b, hh, ww, c = x.shape
             x = x.reshape(b, hh // 2, 2, ww // 2, 2, c).max(axis=(2, 4))
-    return _conv2d(x, params.head, plan, mode, use_kernel)
+    return _conv2d(x, params.head, plan, mode, use_kernel,
+                   chosen=chosen[-1])
 
 
 def ultranet_layer_shapes(h: int, w: int, in_ch: int = 3):

@@ -1,0 +1,211 @@
+"""On-device autotune: time the analytic top-k through the real kernels.
+
+The analytic model (``cost.py``) ranks candidates by effective wide
+multiplies; wall clock additionally depends on block shapes, VMEM
+pressure and XLA fusion, so the planner can optionally *measure* the
+shortlist through the live ``kernels/ops`` dispatch on synthetic data
+of the layer's exact shape and dtype domain.
+
+Timings are persisted in a JSON plan cache keyed by
+``(layer shape+bits, datapath+plan, backend)`` so re-planning the same
+network is free; the chosen plan is additionally stored under a
+``choice|...`` key that ``serve_params(plan_policy="cache")`` and the
+CLI consult without re-timing.  The cache path defaults to
+``$REPRO_PLAN_CACHE`` or ``.repro_plan_cache.json`` in the working
+directory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.datapath import SDVPlan
+
+from .cost import PlanChoice, choose_plan, score_plan
+from .enumerate import LayerSpec, Plan, plan_from_dict, plan_to_dict
+
+CACHE_VERSION = 1
+_ENV_VAR = "REPRO_PLAN_CACHE"
+
+
+def default_cache_path() -> str:
+    return os.environ.get(_ENV_VAR, ".repro_plan_cache.json")
+
+
+def _backend() -> str:
+    import jax
+    return jax.default_backend()
+
+
+def timing_key(layer: LayerSpec, plan: Plan, backend: str) -> str:
+    pd = plan_to_dict(plan)
+    sig = ".".join(f"{k}{v}" for k, v in sorted(pd.items()) if k != "spec")
+    return f"{layer.key()}|{pd['spec']}|{sig}|{backend}"
+
+
+def choice_key(layer: LayerSpec, backend: str) -> str:
+    return f"choice|{layer.key()}|{backend}"
+
+
+@dataclasses.dataclass
+class PlanCache:
+    """JSON-file plan cache.  ``entries`` maps a key to either
+    ``{"us": float, "plan": {...}}`` (a measured candidate) or
+    ``{"plan": {...}, "score": float, "source": str}`` (a choice)."""
+    path: str
+    entries: Dict[str, dict] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path: Optional[str] = None) -> "PlanCache":
+        path = path or default_cache_path()
+        entries: Dict[str, dict] = {}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    payload = json.load(f)
+                if payload.get("version") == CACHE_VERSION:
+                    entries = dict(payload.get("entries", {}))
+            except (OSError, ValueError):
+                entries = {}       # corrupt cache: start fresh
+        return cls(path=path, entries=entries)
+
+    def save(self) -> None:
+        with open(self.path, "w") as f:
+            json.dump({"version": CACHE_VERSION, "entries": self.entries},
+                      f, indent=1, sort_keys=True)
+
+    def get_choice(self, layer: LayerSpec,
+                   backend: Optional[str] = None) -> Optional[PlanChoice]:
+        entry = self.entries.get(choice_key(layer, backend or _backend()))
+        if entry is None:
+            return None
+        plan = plan_from_dict(entry["plan"])
+        return PlanChoice(layer=layer, plan=plan,
+                          cost=score_plan(layer, plan),
+                          measured_us=entry.get("us"))
+
+    def put_choice(self, choice: PlanChoice, source: str,
+                   backend: Optional[str] = None) -> None:
+        self.entries[choice_key(choice.layer, backend or _backend())] = {
+            "plan": plan_to_dict(choice.plan),
+            "score": choice.cost.score,
+            "source": source,
+            **({"us": choice.measured_us}
+             if choice.measured_us is not None else {}),
+        }
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+def _time_us(fn, repeats: int = 2) -> float:
+    import jax
+    jax.block_until_ready(fn())              # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def _layer_runner(layer: LayerSpec, plan: Plan, use_kernel: bool):
+    """Build a nullary callable running the layer through the live
+    dispatch with synthetic data in the plan's exact dtype domain."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+
+    def rand_signed(bits, shape):
+        lim = 1 << (bits - 1)
+        return rng.integers(-lim, lim, size=shape)
+
+    if layer.kind == "matmul":
+        rows, k, m = layer.rows, layer.k, layer.m
+        w_int = rand_signed(plan.w_a, (m, k)) if plan.signed_a \
+            else rng.integers(0, 1 << plan.w_a, size=(m, k))
+        words = ops.prepare_sdv_weights(jnp.asarray(w_int), plan)
+        lo, hi = ((-(1 << plan.w_b - 1), 1 << plan.w_b - 1)
+                  if plan.signed_b else (0, 1 << plan.w_b))
+        x = jnp.asarray(rng.integers(lo, hi, size=(rows, k)), jnp.int32)
+        return lambda: ops.packed_matmul(x, words, plan=plan, m=m,
+                                         use_kernel=use_kernel)
+
+    if layer.kind == "conv2d" and isinstance(plan, SDVPlan):
+        # time the FULL im2col dispatch (patch materialization
+        # included — cost.py prices that traffic, so the measurement
+        # must pay it too); the base BSEG plan only passes the route
+        # gates, compute runs on the sdv_plan override
+        from repro.core.datapath import INT32, plan_bseg
+        x = jnp.asarray(rng.integers(0, 1 << layer.a_bits,
+                                     size=(layer.rows, layer.h, layer.w,
+                                           layer.c_in)), jnp.int32)
+        w = jnp.asarray(rand_signed(plan.w_a,
+                                    (layer.c_out, layer.c_in, layer.kh,
+                                     layer.kw)), jnp.int8)
+        base = plan_bseg(INT32, 2, 2)
+        # even taps cannot im2col ('same' pad): the dispatch would run
+        # the ref conv, so that is what gets timed
+        mode = "im2col" if layer.kh % 2 and layer.kw % 2 else "ref"
+        return lambda: ops.packed_conv2d(
+            x, w, plan=base, mode=mode,
+            sdv_plan=plan if mode == "im2col" else None,
+            zero_point=0, use_kernel=use_kernel)
+
+    if layer.kind == "conv2d":
+        x = jnp.asarray(rng.integers(0, 1 << plan.w_i,
+                                     size=(layer.rows, layer.h, layer.w,
+                                           layer.c_in)), jnp.int32)
+        w = jnp.asarray(rand_signed(plan.w_k,
+                                    (layer.c_out, layer.c_in, layer.kh,
+                                     layer.kw)), jnp.int8)
+        return lambda: ops.packed_conv2d(x, w, plan=plan, zero_point=0,
+                                         use_kernel=use_kernel)
+
+    # conv1d: the causal depthwise short conv
+    taps = jnp.asarray(rand_signed(plan.w_k, (layer.c_in, layer.kw)))
+    kappa, tap_sum = ops.prepare_bseg_taps(taps, plan)
+    zp = 1 << (plan.w_i - 1)
+    x = jnp.asarray(rng.integers(-zp, (1 << plan.w_i) - zp,
+                                 size=(layer.rows, layer.w, layer.c_in)),
+                    jnp.int8)
+    return lambda: ops.bseg_conv1d(x, kappa, tap_sum, plan=plan,
+                                   n_taps=layer.kw, zero_point=zp,
+                                   use_kernel=use_kernel)
+
+
+def autotune_layer(layer: LayerSpec, *, cache: Optional[PlanCache] = None,
+                   top_k: int = 3, repeats: int = 2,
+                   use_kernel: bool = True) -> PlanChoice:
+    """Time the analytic top-k through the real kernels; return the
+    fastest as the choice (cache-backed, cached timings are reused)."""
+    analytic = choose_plan(layer, use_kernel=use_kernel, top_k=top_k)
+    shortlist: List[Plan] = [analytic.plan] \
+        + [p for p, _ in analytic.alternatives]
+    backend = _backend()
+    timed = []
+    for plan in shortlist:
+        key = timing_key(layer, plan, backend)
+        entry = cache.entries.get(key) if cache is not None else None
+        if entry is not None:
+            us = entry["us"]
+        else:
+            us = _time_us(_layer_runner(layer, plan, use_kernel), repeats)
+            if cache is not None:
+                cache.entries[key] = {"us": us,
+                                      "plan": plan_to_dict(plan)}
+        timed.append((us, plan))
+    timed.sort(key=lambda t: t[0])
+    best_us, best = timed[0]
+    choice = PlanChoice(layer=layer, plan=best,
+                        cost=score_plan(layer, best, use_kernel),
+                        alternatives=analytic.alternatives,
+                        measured_us=best_us)
+    if cache is not None:
+        cache.put_choice(choice, source="autotune", backend=backend)
+    return choice
