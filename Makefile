@@ -1,4 +1,4 @@
-.PHONY: test dev-deps planner-smoke planner-test
+.PHONY: test dev-deps planner-smoke planner-test test-datapaths
 
 # tier-1 verify (ROADMAP.md): the whole suite, fail-fast, quiet
 test:
@@ -10,6 +10,11 @@ planner-smoke:
 
 planner-test: planner-smoke
 	PYTHONPATH=src python -m pytest -q tests/test_planner.py
+
+# cross-datapath differential harness: every enumerable plan on every
+# datapath through the packed dispatch, bit-exact vs the oracles
+test-datapaths:
+	PYTHONPATH=src python -m pytest -q tests/test_datapath_diff.py
 
 dev-deps:
 	pip install -r requirements-dev.txt

@@ -190,7 +190,11 @@ def ultranet_planned_vs_default(size: int = 32, repeats: int = 2) -> dict:
     """Mixed-precision planner (``repro.planner``) vs the uniform
     default plan on the end-to-end UltraNet frame: wall clock through
     the real dispatch, analytic wide-multiply totals, and the per-layer
-    plan table — the PR-3 acceptance payload."""
+    plan table.  With the conv datapath gap closed (PR 4) the planner
+    is free to put 3x3 body layers on the wide DSP48E2/DSP58 emulation
+    words (BSEG n_k=3 x n_i=2, density 6) instead of pricing them as
+    ref fallbacks — ``non_int32_datapath_layers`` lists the layers that
+    actually left the INT32 lane, all still bit-exact."""
     from repro import planner
     from repro.models import ultranet as U
     params = U.init_ultranet(0)
@@ -221,6 +225,9 @@ def ultranet_planned_vs_default(size: int = 32, repeats: int = 2) -> dict:
         "wide_multiplies_default_plan": wide_default,
         "density_planned": macs / max(wide_planned, 1),
         "density_default_plan": macs / max(wide_default, 1),
+        "non_int32_datapath_layers": [
+            c.layer.name for c in choices
+            if c.plan.spec.name != "int32"],
         "layers": [{
             "name": c.layer.name,
             "bits": f"w{c.layer.w_bits}a{c.layer.a_bits}",
@@ -248,7 +255,7 @@ def bench_json(path: str, *, size: int = 32, repeats: int = 3) -> dict:
                packed_vs_naive):
         rows.extend(fn())
     payload = {
-        "pr": 3,
+        "pr": 4,
         "rows": [{"name": n, "us_per_call": us, "derived": str(d)}
                  for n, us, d in rows],
         "ultranet": ultranet_frame(size, repeats=max(1, repeats - 1)),
@@ -264,7 +271,7 @@ def main() -> None:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", default="BENCH_3.json",
+    ap.add_argument("--json", default="BENCH_4.json",
                     help="trajectory file to write")
     ap.add_argument("--size", type=int, default=32,
                     help="UltraNet bench frame size")
@@ -291,7 +298,9 @@ def main() -> None:
           f"{p['density_default_plan']:.2f} MACs/multiply, bit-exact: "
           f"{p['bit_exact_vs_integer_oracle']}, "
           f"{sum(l['differs_from_default'] for l in p['layers'])}/"
-          f"{len(p['layers'])} layers re-planned")
+          f"{len(p['layers'])} layers re-planned, "
+          f"{len(p['non_int32_datapath_layers'])} on non-INT32 "
+          f"datapaths {p['non_int32_datapath_layers']}")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,41 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # planner smoke: the mixed-precision plan table must build for the
 # paper's evaluation model
 python -m repro.planner --arch ultranet --smoke
+# datapath-diff smoke: one tiny conv through the packed dispatch on
+# EVERY datapath (int32 / fp32m / dsp48e2 / dsp58) must be bit-exact
+# against the integer oracle — the fast gate on the conv-gap closure
+# (the full sweep is tests/test_datapath_diff.py / make test-datapaths)
+python - <<'PY'
+import jax; jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.core.datapath import DATAPATHS, plan_bseg
+from repro.kernels import ops, ref
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.integers(0, 16, (1, 4, 6, 2)), jnp.int32)
+w = jnp.asarray(rng.integers(-8, 8, (3, 2, 3, 3)), jnp.int8)
+want = np.asarray(ref.conv2d_int_ref(x, w))
+for name in ("int32", "fp32m", "dsp48e2", "dsp58"):
+    plan = plan_bseg(DATAPATHS[name], 4, 4)
+    route = ops.select_conv_route(x.shape, w.shape, plan=plan)
+    assert route != "ref", (name, route)
+    y = ops.packed_conv2d(x, w, plan=plan, mode="auto", zero_point=0)
+    assert (np.asarray(y) == want).all(), name
+    print(f"datapath-diff smoke ok: {name} -> {route}")
+PY
+# the tracked BENCH_4 payload must be well-formed and show the planner
+# actually using a non-INT32 datapath on a kernel route
+python - BENCH_4.json <<'PY'
+import json, sys
+payload = json.load(open(sys.argv[1]))
+p = payload["planner"]
+assert p["bit_exact_vs_integer_oracle"] is True, p
+assert p["non_int32_datapath_layers"], \
+    "no UltraNet layer selected a non-INT32 datapath plan"
+wide = [l for l in p["layers"] if l["datapath"] != "int32"]
+assert wide and all(l["route"] != "ref" for l in wide), wide
+print(f"BENCH_4.json ok: {p['non_int32_datapath_layers']} on "
+      f"{sorted({l['datapath'] for l in wide})}")
+PY
 # bench smoke: the kernel benchmarks must RUN on tiny shapes (the
 # trajectory JSON goes to a scratch path, not the tracked BENCH_<pr>)
 BENCH_SMOKE="${TMPDIR:-/tmp}/bench_smoke.json"

@@ -45,17 +45,27 @@ def _is_float(dt) -> bool:
     return jnp.issubdtype(jnp.dtype(dt), jnp.floating)
 
 
-def _shift_down(word, bits: int):
+def shift_down(word, bits: int):
+    """word >> bits — exact power-of-two divide + floor on the float
+    (FP32M) word representation.  Shared with the Pallas kernels via
+    ``kernels/bseg_common.WordSpec`` so the two cannot drift."""
     if _is_float(word.dtype):
         return jnp.floor(word / float(2 ** bits))
     return word >> bits
 
 
-def _mod_pow2(word, bits: int):
+def mod_pow2(word, bits: int):
+    """word mod 2^bits — mask on integers, exact float mod on FP32M
+    (the operand is a non-negative exact integer below 2^w_word)."""
     if _is_float(word.dtype):
         q = float(2 ** bits)
         return word - jnp.floor(word / q) * q
     return word & ((1 << bits) - 1)
+
+
+# package-internal aliases (pre-rename)
+_shift_down = shift_down
+_mod_pow2 = mod_pow2
 
 
 def bseg_pack_kernel(taps: jnp.ndarray, plan: BSEGPlan) -> jnp.ndarray:

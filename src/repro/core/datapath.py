@@ -240,6 +240,15 @@ def plan_bseg(spec: DatapathSpec, w_k: int, w_i: int, *,
             # product of the two packed factors must stay in the word:
             if wa_used + wb_used > spec.w_word:
                 continue
+            # ... and so must the *biased* accumulation word: every one
+            # of the n_k + n_i - 1 product lanes carries the 2^(L-1)
+            # guard bias and stays within [0, 2^L) (Eqs. 9/10), so the
+            # accumulator (the DSP P register / the TPU word) holds up
+            # to (n_k + n_i - 1) * L bits.  With guard-swept lanes
+            # (L > w_k + w_i) this can exceed the port-product bound
+            # above — the top lane's bias would fall off the word.
+            if (nk + ni - 1) * L > spec.w_word:
+                continue
             if wa_used > spec.w_packed or wb_used > spec.w_other:
                 continue
             # maximize the low-part width under Eq. 10:

@@ -9,17 +9,44 @@ next carry word (the DSP C-port / cascade) — and a high part that is
 accumulated into the output buffer in fabric (Fig. 7).  This module is
 that per-word step, factored out so the two kernels cannot drift.
 
-Everything here runs *inside* a Pallas kernel body: int32 arrays only,
-static Python loops over lanes (``n_lanes`` is tiny), no jnp dtype
-promotion surprises.
+Everything here runs *inside* a Pallas kernel body and is parameterized
+over a ``WordSpec`` — the representation of the wide word on the chosen
+datapath — instead of hard-coded int32:
+
+  * ``int32``  — the TPU INT32 lane (exact mod-2^32 wrap; shifts and
+    masks are value-preserving below bit 32, so the word may wrap);
+  * ``int64``  — the DSP48E2/DSP58 emulation words (48/58 bits live in
+    a 64-bit integer; needs ``jax_enable_x64``);
+  * ``float32`` — the FP32M mantissa datapath.  fp32 *rounds* on
+    overflow instead of wrapping, so the word must never leave the
+    exact mantissa budget: the Eq. 9/10 guard-bit dimensioning keeps
+    every lane inside [0, 2^L) and ``plan_bseg`` keeps the packed
+    factor product inside ``w_word`` (<= 24), hence every intermediate
+    is an exact integer below 2^24 and fp32 arithmetic is exact.
+    Shifts become exact power-of-two divides + ``floor``; masks become
+    ``mod``.
+
+Lane values extracted from the word are tiny (within +-2^L), so the
+fabric side — the adder tree and the output buffer — always accumulates
+in ``FABRIC_DTYPE`` (int32, matching ``ref.conv2d_int_ref``) regardless
+of the word representation.  Static Python loops over lanes only
+(``n_lanes`` is tiny), no jnp dtype promotion surprises.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 from typing import List, Tuple
 
 import jax.numpy as jnp
 
+from repro.core import bseg as core_bseg
 from repro.core.datapath import BSEGPlan
+
+#: dtype of the in-fabric adder tree / output accumulation buffer.  The
+#: extracted lane values fit easily; int32 end-to-end matches the
+#: integer conv oracle on every datapath.
+FABRIC_DTYPE = jnp.int32
 
 
 def bias_word_full(plan: BSEGPlan) -> int:
@@ -35,29 +62,142 @@ def bias_word_top(plan: BSEGPlan) -> int:
                for p in range(plan.n_lanes - plan.n_i, plan.n_lanes))
 
 
+@dataclasses.dataclass(frozen=True)
+class WordSpec:
+    """How a BSEG wide word is represented inside a kernel body.
+
+    Attributes:
+      dtype_name: jnp dtype name holding the word ("int32" / "int64" /
+        "float32").
+      width: exact bits available in that representation (the datapath
+        ``w_word``).
+      exact_wrap: True when overflow wraps losslessly (integers); False
+        when it rounds (fp32) and must be impossible by dimensioning.
+      bias_full / bias_top: the guard-bias constants of
+        ``bias_word_full`` / ``bias_word_top`` for the plan.
+    """
+
+    dtype_name: str
+    width: int
+    exact_wrap: bool
+    bias_full: int
+    bias_top: int
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.dtype_name)
+
+    @property
+    def is_float(self) -> bool:
+        return self.dtype_name == "float32"
+
+    def const(self, value: int):
+        """A scalar word-domain constant.  Integer representations wrap
+        the value into the dtype's signed range (mod-2^bits, exactly
+        the exact-wrap semantics of the datapath: a bias whose top bit
+        lands on the sign bit is still value-preserving under the
+        mask-based lane extraction); floats are exact by the guard-bit
+        dimensioning."""
+        if self.is_float:
+            return jnp.float32(float(value))
+        bits = 64 if self.dtype_name == "int64" else 32
+        v = value % (1 << bits)
+        if v >= 1 << (bits - 1):
+            v -= 1 << bits
+        return jnp.asarray(v, self.dtype)
+
+    def scale(self, bits: int):
+        """The lane scale 2^bits as a word-domain constant (multiply by
+        it == shift left by ``bits``; exact in every representation)."""
+        return self.const(1 << bits)
+
+    def shift_down(self, word, bits: int):
+        """word >> bits (floor semantics; exact power-of-two divide on
+        the float representation) — ``core.bseg.shift_down``, shared so
+        the jnp emulation and the kernels cannot drift."""
+        return core_bseg.shift_down(word, bits)
+
+    def mod_pow2(self, word, bits: int):
+        """word mod 2^bits — ``core.bseg.mod_pow2`` (mask on integers,
+        exact float mod on the FP32M representation)."""
+        return core_bseg.mod_pow2(word, bits)
+
+    def field(self, word, lsb: int, bits: int):
+        """Extract the ``bits``-wide lane field starting at bit ``lsb``."""
+        return self.mod_pow2(self.shift_down(word, lsb), bits)
+
+
+@functools.lru_cache(maxsize=None)
+def word_spec(plan: BSEGPlan) -> WordSpec:
+    """The word representation for a plan's datapath.
+
+    FP32M (``exact_wrap=False``) additionally requires that the word can
+    never reach the first lossy bit: Eqs. 9/10 keep every lane inside
+    [0, 2^L) and ``plan_bseg`` enforces ``wa_used + wb_used <= w_word``,
+    which implies ``n_lanes * L + 2 <= w_word`` — so the whole word
+    (and each ``kappa * iota`` product) stays an exact integer below
+    2^w_word <= 2^24.  The assert documents that no-exact-wrap guard
+    dimensioning; a plan violating it cannot come out of ``plan_bseg``.
+    """
+    spec = plan.spec
+    # the biased accumulation word spans n_lanes * L bits (plan_bseg
+    # enforces this fits w_word); on a no-exact-wrap word that is also
+    # what makes fp32 arithmetic exact, on integers it keeps the top
+    # lane's guard bias on the word.
+    assert plan.n_lanes * plan.lane <= spec.w_word, (
+        f"plan overruns the {spec.name} accumulator word: "
+        f"{plan.n_lanes} lanes x L={plan.lane} vs w_word={spec.w_word}")
+    # the dtype rule lives in core.bseg.word_dtype (the jnp emulation)
+    # — delegate so the two paths cannot diverge
+    return WordSpec(dtype_name=jnp.dtype(core_bseg.word_dtype(plan)).name,
+                    width=spec.w_word,
+                    exact_wrap=spec.exact_wrap,
+                    bias_full=bias_word_full(plan),
+                    bias_top=bias_word_top(plan))
+
+
+def word_dtype(plan: BSEGPlan):
+    """Dtype of the packed factors / carry words for this plan (the
+    kernel-side mirror of ``core.bseg.word_dtype``)."""
+    return word_spec(plan).dtype
+
+
+def pack_iota(seg, plan: BSEGPlan, *, axis: int):
+    """Pack ``n_i`` unsigned input samples (size-``n_i`` ``axis`` of
+    ``seg``, any integer dtype) into one input factor per position, in
+    the plan's word representation."""
+    ws = word_spec(plan)
+    segs = jnp.moveaxis(seg, axis, 0).astype(ws.dtype)
+    iota = jnp.zeros_like(segs[0])
+    for j in range(plan.n_i):
+        iota = iota + segs[j] * ws.scale(j * plan.lane)
+    return iota
+
+
 def split_word(word: jnp.ndarray, plan: BSEGPlan
                ) -> Tuple[List[jnp.ndarray], jnp.ndarray]:
-    """One Fig. 6/7 post-multiply step on a wide word (any shape, i32).
+    """One Fig. 6/7 post-multiply step on a wide word (any shape, in
+    the plan's word representation).
 
     Returns ``(lanes, c_next)`` where ``lanes`` has ``plan.n_lanes``
-    entries shaped like ``word``: the first ``n_i`` are completed
-    outputs (bias removed), the rest are the extracted high parts of
-    the carried lanes; ``c_next`` is the re-biased carry word for the
-    next step (resident low parts shifted down ``n_i`` lanes, fresh
-    bias on the newly exposed top lanes).
+    entries shaped like ``word`` in ``FABRIC_DTYPE``: the first ``n_i``
+    are completed outputs (bias removed), the rest are the extracted
+    high parts of the carried lanes; ``c_next`` is the re-biased carry
+    word for the next step (resident low parts shifted down ``n_i``
+    lanes, fresh bias on the newly exposed top lanes), staying in the
+    word representation.
     """
+    ws = word_spec(plan)
     n_i, n_lanes, L = plan.n_i, plan.n_lanes, plan.lane
-    bias = plan.bias
-    lane_mask = (1 << L) - 1
-    lo_mask = (1 << plan.w_l) - 1
+    bias = ws.const(plan.bias)
     lanes = []
     for p in range(n_i):                       # completed outputs
-        f = (word >> (p * L)) & lane_mask
-        lanes.append(f - bias)
-    c_next = jnp.zeros_like(word) + jnp.int32(bias_word_top(plan))
+        f = ws.field(word, p * L, L)
+        lanes.append((f - bias).astype(FABRIC_DTYPE))
+    c_next = jnp.zeros_like(word) + ws.const(ws.bias_top)
     for p in range(n_i, n_lanes):              # carried lanes: hi/lo slice
-        f = (word >> (p * L)) & lane_mask
-        lo = f & lo_mask
-        lanes.append((f - lo) - bias)          # tracked in fabric
-        c_next = c_next + ((lo + bias) << ((p - n_i) * L))
+        f = ws.field(word, p * L, L)
+        lo = ws.mod_pow2(f, plan.w_l)
+        lanes.append(((f - lo) - bias).astype(FABRIC_DTYPE))
+        c_next = c_next + (lo + bias) * ws.scale((p - n_i) * L)
     return lanes, c_next

@@ -30,25 +30,23 @@ from . import bseg_common
 
 def _body(plan: BSEGPlan, n_groups: int, n_steps: int, s_out: int,
           x_ref, kap_ref, o_ref, buf_ref, carry_ref):
-    n_k, n_i, L = plan.n_k, plan.n_i, plan.lane
+    n_k, n_i = plan.n_k, plan.n_i
     n_lanes = plan.n_lanes
+    ws = bseg_common.word_spec(plan)
 
     buf_ref[...] = jnp.zeros_like(buf_ref)
-    carry_ref[...] = jnp.full_like(carry_ref, 0) \
-        + jnp.int32(bseg_common.bias_word_full(plan))
+    carry_ref[...] = jnp.full(carry_ref.shape, ws.const(ws.bias_full))
 
     xb = x_ref[0]                                # [s_pad, bc] int8 unsigned
-    kap = kap_ref[...]                           # [n_groups, bc] int32
+    kap = kap_ref[...]                           # [n_groups, bc] word dtype
 
     def step(t, _):
         tau = t * n_i
         upd = jnp.zeros((n_lanes, xb.shape[1]), jnp.int32)
         for g in range(n_groups):
             rows = jax.lax.dynamic_slice_in_dim(
-                xb, tau + g * n_k, n_i, axis=0).astype(jnp.int32)  # [n_i, bc]
-            iota = jnp.zeros_like(rows[0])
-            for j in range(n_i):
-                iota = iota + (rows[j] << (j * L))
+                xb, tau + g * n_k, n_i, axis=0)            # [n_i, bc]
+            iota = bseg_common.pack_iota(rows, plan, axis=0)
             word = kap[g] * iota + carry_ref[g]  # wide MAC + C port
             # emit completed lanes + slice carried lanes (Fig. 7)
             lanes, c_next = bseg_common.split_word(word, plan)
@@ -76,9 +74,11 @@ def bseg_conv1d(x_pad: jnp.ndarray, kappa: jnp.ndarray, *, plan: BSEGPlan,
       x_pad: [B, S_pad, C] int8, unsigned values in [0, 2^w_i), already
         left-padded with n-1 zeros (plus any alignment padding at the
         right end — see ops.prepare for the exact amount).
-      kappa: [G, C] int32 packed kernel factors (one per tap group,
-        pre-adder applied at weight-prep time).
-      plan: BSEG plan on the INT32 datapath.
+      kappa: [G, C] packed kernel factors in the plan's word dtype
+        (``bseg_common.word_dtype``; one per tap group, pre-adder
+        applied at weight-prep time).
+      plan: BSEG plan on any supported datapath (int32 / fp32 / int64
+        word representation — see ``bseg_common.WordSpec``).
       s_out: number of output samples.
 
     Returns:
@@ -105,7 +105,7 @@ def bseg_conv1d(x_pad: jnp.ndarray, kappa: jnp.ndarray, *, plan: BSEGPlan,
         out_shape=jax.ShapeDtypeStruct((b, s_out, c), jnp.int32),
         scratch_shapes=[
             pltpu.VMEM((buf_len, bc), jnp.int32),
-            pltpu.VMEM((n_groups, bc), jnp.int32),
+            pltpu.VMEM((n_groups, bc), bseg_common.word_dtype(plan)),
         ],
         interpret=interpret,
     )(x_pad, kappa)

@@ -10,8 +10,10 @@ Mapping (Figs. 6/7):
 
   * every kernel row r of every input channel ci is a 1-D BSEG row
     conv: kw taps packed (reversed, pre-adder) into ceil(kw/n_k) tap
-    groups, n_i input samples packed per step — one wide int32 multiply
-    performs n_k * n_i MACs;
+    groups, n_i input samples packed per step — one wide multiply (in
+    the plan's word representation: int32 for the INT32 lane, float32
+    for FP32M, int64 for the DSP48E2/DSP58 emulation words — see
+    ``bseg_common.WordSpec``) performs n_k * n_i MACs;
   * the (r, ci) pipelines are *fused into one vectorized axis* of size
     kh * C_in: their wide words advance in lock-step through the Fig. 6
     schedule, each with its own packed-partial carry word (the DSP
@@ -51,8 +53,8 @@ from . import bseg_common
 def _body(plan: BSEGPlan, n_groups: int, kh: int, n_steps: int,
           w_out: int, bh: int, x_ref, kap_ref, o_ref, buf_ref):
     n_k, n_i = plan.n_k, plan.n_i
-    L = plan.lane
     n_lanes = plan.n_lanes
+    ws = bseg_common.word_spec(plan)
 
     buf_ref[...] = jnp.zeros_like(buf_ref)
 
@@ -67,7 +69,6 @@ def _body(plan: BSEGPlan, n_groups: int, kh: int, n_steps: int,
     xf = jnp.concatenate(
         [jax.lax.dynamic_slice_in_dim(xb, row0 + r, bh, axis=0)
          for r in range(kh)], axis=2)      # [bh, W_pad, kh*C_in]
-    xf = xf.astype(jnp.int32)
     kap = kap_ref[...].reshape(n_groups, khc, bco)
 
     for g in range(n_groups):
@@ -77,9 +78,7 @@ def _body(plan: BSEGPlan, n_groups: int, kh: int, n_steps: int,
             tau = t * n_i
             seg = jax.lax.dynamic_slice_in_dim(
                 xf, tau + g * n_k, n_i, axis=1)        # [bh, n_i, khc]
-            iota = jnp.zeros((bh, khc), jnp.int32)
-            for j in range(n_i):
-                iota = iota + (seg[:, j, :] << (j * L))
+            iota = bseg_common.pack_iota(seg, plan, axis=1)  # [bh, khc]
             word = kap_g[None] * iota[..., None] + carry   # [bh, khc, bco]
             # Fig. 7 slicing per pipeline, THEN the adder tree over (r, ci)
             lanes, c_next = bseg_common.split_word(word, plan)
@@ -91,8 +90,7 @@ def _body(plan: BSEGPlan, n_groups: int, kh: int, n_steps: int,
                 buf_ref[...], prev + upd, (0, tau, 0))
             return c_next
 
-        carry0 = jnp.full((bh, khc, bco),
-                          bseg_common.bias_word_full(plan), jnp.int32)
+        carry0 = jnp.full((bh, khc, bco), ws.const(ws.bias_full))
         jax.lax.fori_loop(0, n_steps, step, carry0)
 
     # buffer index = output column + n_k - 1
@@ -112,9 +110,11 @@ def bseg_conv2d(x_pad: jnp.ndarray, kappa: jnp.ndarray, *, plan: BSEGPlan,
         [0, 2^w_i), already 'same'-padded on H (H_pad = h_out + kh - 1)
         and padded on W to cover the step schedule (see
         ``ops.packed_conv2d`` for the exact amount).
-      kappa: [G, kh, C_in, C_out] int32 packed kernel-row factors (one
-        per tap group, pre-adder applied at weight-prep time).
-      plan: BSEG plan on the INT32 datapath.
+      kappa: [G, kh, C_in, C_out] packed kernel-row factors in the
+        plan's word dtype (``bseg_common.word_dtype``; one per tap
+        group, pre-adder applied at weight-prep time).
+      plan: BSEG plan on any supported datapath (int32 / fp32 / int64
+        word representation — see ``bseg_common.WordSpec``).
       h_out / w_out: output frame size.
       bh / bco: output-row / output-channel block sizes (must divide
         h_out / C_out; the ops wrapper downgrades them if not).
@@ -159,7 +159,7 @@ def bseg_conv2d(x_pad: jnp.ndarray, kappa: jnp.ndarray, *, plan: BSEGPlan,
 def bseg_conv2d_num_multiplies(h_out: int, w_out: int, c_in: int,
                                c_out: int, kh: int, kw: int,
                                plan: BSEGPlan) -> int:
-    """Wide int32 multiplies one ``bseg_conv2d`` launch spends — the
+    """Wide multiplies one ``bseg_conv2d`` launch spends — the
     operational-density currency.  Every (output row, kernel row, input
     channel, output channel, tap group, step) is one wide multiply."""
     n_groups = -(-kw // plan.n_k)

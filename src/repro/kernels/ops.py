@@ -42,35 +42,40 @@ Dispatch table for ``packed_conv2d`` (mode -> kernel -> constraints):
 
   mode           kernel                      constraints
   -------------  --------------------------  ------------------------------
-  bseg_conv2d    kernels/bseg_conv2d         integer x; BSEG ``plan`` with
-                 (cross-channel batched      ``exact_wrap``; stride 1,
-                 conv2d, grid B x H/bh x     'same' pad: odd kh and kw
-                 C_out/bco, fused (kh,C_in)
-                 pipeline axis, VMEM row
-                 accumulator)
+  bseg_conv2d    kernels/bseg_conv2d         integer x; BSEG ``plan`` on
+                 (cross-channel batched      any datapath — the kernel
+                 conv2d, grid B x H/bh x     body is word-generic (int32 /
+                 C_out/bco, fused (kh,C_in)  fp32 / int64 per
+                 pipeline axis, VMEM row     ``bseg_common.WordSpec``; the
+                 accumulator)                int64 emulation words need
+                                             jax_enable_x64 + interpret);
+                                             stride 1, 'same' pad: odd kh
+                                             and kw; ``plan.w_i <= 7``
   bseg_conv1d    kernels/bseg_conv1d         depthwise shape only
                  (depthwise, channels on     (C_in == 1, kh == 1, C_out
                  the VPU lanes)              == x channels); same plan
                                              constraints
   im2col         kernels/sdv_matmul via      integer x; patches unfolded
                  ``packed_matmul`` (SDV      in jnp, compute on the SDV
-                 plan derived from the       datapath; odd kh and kw
-                 BSEG widths: signed
+                 plan derived from the       datapath (int32 exact-wrap
+                 BSEG widths: signed         words only); odd kh and kw
                  w_i+1-bit activations —
                  or a planner-chosen
                  ``sdv_plan`` override)
   ref            pure jnp integer conv       always available; selected
                  (XLA owns the fusion)       in auto when ``use_kernel``
-                                             is False, the datapath is
-                                             not exact-wrap, the word
-                                             exceeds int32 storage, or
+                                             is False, the int64 emulation
+                                             words cannot run (x64 off or
+                                             a compiled TPU backend), or
                                              ``plan.w_i > 7`` (the
                                              kernels stage activations
                                              in int8)
 
 ``mode="auto"`` routes ref-conditions -> bseg_conv1d (depthwise shape)
--> im2col (1x1 kernels — a conv with no spatial reuse is a GEMM) ->
-bseg_conv2d (everything else).
+-> im2col (1x1 kernels on int32-word datapaths — a conv with no
+spatial reuse is a GEMM) -> bseg_conv2d (everything else, including
+1x1 on fp32m / dsp48e2 / dsp58 words, whose SDV storage would not be
+int32).
 """
 from __future__ import annotations
 
@@ -83,6 +88,7 @@ import jax.numpy as jnp
 from repro.core import bseg as core_bseg
 from repro.core import signed_split
 from repro.core.datapath import BSEGPlan, SDVPlan
+from . import bseg_common
 from . import bseg_conv1d as bseg_kernel
 from . import quant_matmul as qmm_kernel
 from . import packbits
@@ -137,7 +143,10 @@ def quant_matmul(x: jnp.ndarray, w_packed: jnp.ndarray, scale: jnp.ndarray,
 
 def prepare_sdv_weights(w_int: jnp.ndarray, plan: SDVPlan) -> jnp.ndarray:
     """[M, K] ints (w_a-bit, signedness per ``plan.signed_a``) -> [K, G]
-    int32 storage words.
+    storage words — int32 for plans whose layout fits 32 bits (every
+    kernel-routed plan), int64 for the wide DSP48E2/DSP58 emulation
+    words (jnp-ref only; packing them into int32 would silently drop
+    the high fields).
 
     Signed layout: sign-sliced remainder fields (D) in the low
     ``plan.packed_width`` bits, the n sign bits parked above — the two
@@ -147,17 +156,20 @@ def prepare_sdv_weights(w_int: jnp.ndarray, plan: SDVPlan) -> jnp.ndarray:
     m, k = w_int.shape
     n = plan.n
     g = -(-m // n)
+    layout_bits = plan.packed_width + (n if plan.signed_a else 0)
+    wdt = jnp.int32 if plan.spec.w_word <= 32 and layout_bits <= 32 \
+        else signed_split.require_dtype(jnp.int64)
     wp = jnp.pad(w_int, ((0, g * n - m), (0, 0))).reshape(g, n, k)
-    word = jnp.zeros((g, k), jnp.int32)
+    word = jnp.zeros((g, k), wdt)
     if plan.signed_a:
-        r, s = signed_split.split_signed(wp.astype(jnp.int32), plan.w_a)
+        r, s = signed_split.split_signed(wp.astype(wdt), plan.w_a)
         for i in range(n):
-            word = word | (r[:, i, :].astype(jnp.int32) << (i * plan.lane))
-            word = word | (s[:, i, :].astype(jnp.int32)
+            word = word | (r[:, i, :].astype(wdt) << (i * plan.lane))
+            word = word | (s[:, i, :].astype(wdt)
                            << (plan.packed_width + i))
     else:
         for i in range(n):
-            word = word | (wp[:, i, :].astype(jnp.int32) << (i * plan.lane))
+            word = word | (wp[:, i, :].astype(wdt) << (i * plan.lane))
     return word.T                                           # [K, G]
 
 
@@ -347,7 +359,8 @@ def packed_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
 # ---------------------------------------------------------------------------
 
 def prepare_bseg_taps(taps: jnp.ndarray, plan: BSEGPlan):
-    """[C, n] signed taps -> ([G, C] int32 packed factors, [C] tap sums).
+    """[C, n] signed taps -> ([G, C] packed factors in the plan's word
+    dtype, [C] tap sums).
 
     Tap groups are packed reversed through the pre-adder; the tap sums
     feed the zero-point correction.
@@ -359,7 +372,8 @@ def prepare_bseg_taps(taps: jnp.ndarray, plan: BSEGPlan):
     for gi in range(groups):
         seg = tp[:, gi * plan.n_k:(gi + 1) * plan.n_k]
         kappas.append(core_bseg.bseg_pack_kernel(seg, plan))
-    kappa = jnp.stack(kappas, axis=0).astype(jnp.int32)      # [G, C]
+    kappa = jnp.stack(kappas, axis=0) \
+        .astype(bseg_common.word_dtype(plan))                # [G, C]
     return kappa, jnp.sum(taps.astype(jnp.int32), axis=-1)
 
 
@@ -405,9 +419,47 @@ def bseg_conv1d(x_q: jnp.ndarray, kappa: jnp.ndarray, tap_sum: jnp.ndarray,
 _CONV_MODES = ("auto", "bseg_conv2d", "bseg_conv1d", "im2col", "ref")
 
 
+def _conv_word_gate(plan: BSEGPlan) -> Optional[str]:
+    """Why the BSEG conv kernels cannot represent this plan's word on
+    the current backend, or ``None`` when they can.
+
+    The kernels are datapath-generic (``bseg_common.WordSpec``): int32
+    for the INT32 lane, float32 for FP32M (guard-bit dimensioning keeps
+    every intermediate exact), int64 for the DSP48E2/DSP58 emulation
+    words.  The int64 representation needs ``jax_enable_x64`` and a
+    CPU interpret backend (the TPU vector unit has no 64-bit path).
+    A hand-built plan whose biased accumulation word overruns the
+    accumulator (``plan_bseg`` refuses to dimension these) is rejected
+    here too, so it degrades to ref / raises instead of tripping a
+    kernel-internal assert.
+    """
+    if plan.n_lanes * plan.lane > plan.spec.w_word:
+        return (f"plan overruns the {plan.spec.name} accumulator word: "
+                f"{plan.n_lanes} lanes x L={plan.lane} > "
+                f"w_word={plan.spec.w_word} (the top lane's guard bias "
+                "falls off the word)")
+    if plan.spec.w_word > 32:
+        if not _on_cpu():
+            return (f"datapath {plan.spec.name}: the int64 emulation "
+                    "words run interpret-only (no 64-bit vector path "
+                    "on this backend)")
+        if not jax.config.jax_enable_x64:
+            return (f"datapath {plan.spec.name} needs "
+                    f"{plan.spec.w_word}-bit words: enable "
+                    "jax_enable_x64 for the int64-emulation kernels")
+    return None
+
+
+def _sdv_words_int32(spec) -> bool:
+    """True when the SDV GEMM kernels can store this datapath's words
+    (int32 exact-wrap) — the im2col route's compute constraint."""
+    return spec.exact_wrap and spec.w_word <= 32
+
+
 def prepare_bseg_conv2d(w_int: jnp.ndarray, plan: BSEGPlan):
-    """[C_out, C_in, kh, kw] signed taps -> ([G, kh, C_in, C_out] int32
-    packed kernel-row factors, [C_out] tap sums).
+    """[C_out, C_in, kh, kw] signed taps -> ([G, kh, C_in, C_out]
+    packed kernel-row factors in the plan's word dtype, [C_out] tap
+    sums).
 
     Each kernel row of each (C_out, C_in) pair packs its kw taps into
     ceil(kw/n_k) groups, reversed through the pre-adder; the tap sums
@@ -421,7 +473,8 @@ def prepare_bseg_conv2d(w_int: jnp.ndarray, plan: BSEGPlan):
     for gi in range(groups):
         seg = wp[..., gi * plan.n_k:(gi + 1) * plan.n_k]
         kappas.append(core_bseg.bseg_pack_kernel(seg, plan))
-    kappa = jnp.stack(kappas, axis=0).astype(jnp.int32)  # [G, C_out, C_in, kh]
+    kappa = jnp.stack(kappas, axis=0) \
+        .astype(bseg_common.word_dtype(plan))            # [G, C_out, C_in, kh]
     kappa = jnp.transpose(kappa, (0, 3, 2, 1))           # [G, kh, C_in, C_out]
     tap_sum = jnp.sum(w_int.astype(jnp.int32), axis=(1, 2, 3))
     return kappa, tap_sum
@@ -453,15 +506,22 @@ def select_conv_route(x_shape, w_shape, *, plan: BSEGPlan,
         raise ValueError(
             f"activation channels {x_shape[-1]} != weight C_in {c_in}")
     if mode in ("bseg_conv2d", "bseg_conv1d", "im2col"):
-        if not plan.spec.exact_wrap:
-            raise ValueError(
-                f"mode {mode!r} needs exact-wrap arithmetic; datapath "
-                f"{plan.spec.name} rounds (fp32)")
-        if plan.spec.w_word > 32:
-            raise ValueError(
-                f"mode {mode!r} packs int32 kernel factors; the "
-                f"{plan.spec.name} datapath needs {plan.spec.w_word}-bit "
-                f"words (int64 emulation lives in core/, jnp only)")
+        if mode == "im2col":
+            if not plan.spec.exact_wrap:
+                raise ValueError(
+                    "mode 'im2col' computes on the SDV datapath, which "
+                    f"needs exact-wrap arithmetic; {plan.spec.name} "
+                    "rounds (fp32) — use the bseg kernels instead")
+            if plan.spec.w_word > 32:
+                raise ValueError(
+                    "mode 'im2col' stores int32 SDV words; the "
+                    f"{plan.spec.name} datapath needs "
+                    f"{plan.spec.w_word}-bit words — use the bseg "
+                    "kernels instead")
+        else:
+            gate = _conv_word_gate(plan)
+            if gate is not None:
+                raise ValueError(f"mode {mode!r}: {gate}")
         if plan.w_i > 7:
             raise ValueError(
                 f"mode {mode!r} stages activations in int8: plan.w_i "
@@ -481,15 +541,9 @@ def select_conv_route(x_shape, w_shape, *, plan: BSEGPlan,
     # --- auto ---
     if not use_kernel:
         return _r("ref", "no Pallas backend (use_kernel=False)")
-    if not plan.spec.exact_wrap:
-        return _r("ref", f"datapath {plan.spec.name} rounds (fp32): "
-                         "guard-bit extraction needs exact bits "
-                         "(the ROADMAP FP32M conv gap)")
-    if plan.spec.w_word > 32:
-        return _r("ref", f"datapath {plan.spec.name} needs "
-                         f"{plan.spec.w_word}-bit words: the conv "
-                         "kernels are int32 (the ROADMAP int64 conv "
-                         "gap)")
+    gate = _conv_word_gate(plan)
+    if gate is not None:
+        return _r("ref", gate)
     if plan.w_i > 7:
         return _r("ref", f"plan.w_i={plan.w_i} > 7: the conv kernels "
                          "stage activations in int8")
@@ -498,12 +552,19 @@ def select_conv_route(x_shape, w_shape, *, plan: BSEGPlan,
                          "pad")
     if _is_depthwise(x_shape, w_shape):
         return _r("bseg_conv1d",
-                  "depthwise shape: channels ride the VPU lanes")
+                  f"depthwise shape on the {plan.spec.name} word: "
+                  "channels ride the VPU lanes")
     if kh == 1 and kw == 1:
-        return _r("im2col", "1x1 kernel: no spatial reuse -> GEMM on "
-                            "the SDV datapath")
+        if _sdv_words_int32(plan.spec):
+            return _r("im2col", "1x1 kernel: no spatial reuse -> GEMM "
+                                "on the SDV datapath")
+        return _r("bseg_conv2d",
+                  f"1x1 kernel on the {plan.spec.name} word: the SDV "
+                  "GEMM stores int32 words, the BSEG kernel runs the "
+                  "word natively")
     return _r("bseg_conv2d",
-              "dense kxk conv: one cross-channel kernel launch")
+              f"dense kxk conv on the {plan.spec.name} word: one "
+              "cross-channel kernel launch")
 
 
 def select_conv1d_route(plan: BSEGPlan, *, use_kernel: bool = True,
@@ -518,17 +579,14 @@ def select_conv1d_route(plan: BSEGPlan, *, use_kernel: bool = True,
 
     if not use_kernel:
         return _r("ref", "no Pallas backend (use_kernel=False)")
-    if not plan.spec.exact_wrap:
-        return _r("ref", f"datapath {plan.spec.name} rounds (fp32): "
-                         "guard-bit extraction needs exact bits")
-    if plan.spec.w_word > 32:
-        return _r("ref", f"datapath {plan.spec.name} needs "
-                         f"{plan.spec.w_word}-bit words: the conv "
-                         "kernels are int32")
+    gate = _conv_word_gate(plan)
+    if gate is not None:
+        return _r("ref", gate)
     if plan.w_i > 7:
         return _r("ref", f"plan.w_i={plan.w_i} > 7: the conv kernels "
                          "stage activations in int8")
-    return _r("bseg_conv1d", "causal depthwise short conv")
+    return _r("bseg_conv1d",
+              f"causal depthwise short conv on the {plan.spec.name} word")
 
 
 def _im2col_sdv_plan(plan: BSEGPlan) -> SDVPlan:
@@ -565,7 +623,8 @@ def packed_conv2d(x: jnp.ndarray, w_int: jnp.ndarray, *, plan: BSEGPlan,
         lie in the unsigned datapath domain [0, 2^w_i) (pass 0 when the
         activations are already unsigned, e.g. post-requantization).
       w_int: [C_out, C_in, kh, kw] signed taps within ``plan.w_k`` bits.
-      plan: BSEG plan (an exact-wrap datapath for the kernel routes).
+      plan: BSEG plan on any supported datapath (the kernels run the
+        word in its native representation — int32 / fp32 / int64).
       mode: a row of the dispatch table, or ``"auto"``.
       block_h / block_co: output-row / output-channel block sizes for
         the conv2d kernel (downgraded to H / C_out when not divisible).
@@ -648,6 +707,7 @@ def _unpack_bseg_taps(kappa: jnp.ndarray, plan: BSEGPlan,
     groups = kappa.shape[0]
     segs = []
     for gi in range(groups):
+        # fp32m factors are exact integers below 2^24: int32 decode
         word = kappa[gi].astype(jnp.int64) if kappa.dtype == jnp.int64 \
             else kappa[gi].astype(jnp.int32)
         vals = []

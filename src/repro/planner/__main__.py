@@ -51,6 +51,13 @@ def main(argv: Optional[list] = None) -> int:
                     help="also write the table as JSON")
     args = ap.parse_args(argv)
 
+    # like benchmarks/run.py: the DSP48E2/DSP58 emulation words are
+    # int64, and the conv kernels run them when x64 is on — without
+    # this the plan table would (correctly, but unhelpfully for an
+    # analysis CLI) gate every wide-word plan to the ref route
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
     from repro import planner
 
     cache = None

@@ -6,6 +6,19 @@ pressure and XLA fusion, so the planner can optionally *measure* the
 shortlist through the live ``kernels/ops`` dispatch on synthetic data
 of the layer's exact shape and dtype domain.
 
+Two guards keep the measurement honest:
+
+  * ref-routed shortlist candidates are skipped when a kernel-routed
+    candidate with an identical-or-better analytic score is already on
+    the shortlist — timing the pure-jnp ref against interpret-mode
+    kernels tells you about the interpreter, not the datapath, and an
+    interpret-mode ref win would steer serving onto a route with no
+    packing at all;
+  * every cache entry records the dispatch *route* the plan resolved
+    to when it was measured; entries whose recorded route no longer
+    matches ``select_*_route`` (e.g. a ref gap since closed by a new
+    kernel) are invalidated instead of replayed.
+
 Timings are persisted in a JSON plan cache keyed by
 ``(layer shape+bits, datapath+plan, backend)`` so re-planning the same
 network is free; the chosen plan is additionally stored under a
@@ -26,7 +39,7 @@ import numpy as np
 
 from repro.core.datapath import SDVPlan
 
-from .cost import PlanChoice, choose_plan, score_plan
+from .cost import PlanChoice, choose_plan, route_for, score_plan
 from .enumerate import LayerSpec, Plan, plan_from_dict, plan_to_dict
 
 CACHE_VERSION = 1
@@ -80,13 +93,26 @@ class PlanCache:
                       f, indent=1, sort_keys=True)
 
     def get_choice(self, layer: LayerSpec,
-                   backend: Optional[str] = None) -> Optional[PlanChoice]:
-        entry = self.entries.get(choice_key(layer, backend or _backend()))
+                   backend: Optional[str] = None,
+                   use_kernel: bool = True) -> Optional[PlanChoice]:
+        key = choice_key(layer, backend or _backend())
+        entry = self.entries.get(key)
         if entry is None:
             return None
         plan = plan_from_dict(entry["plan"])
-        return PlanChoice(layer=layer, plan=plan,
-                          cost=score_plan(layer, plan),
+        cost = score_plan(layer, plan, use_kernel)
+        # Route-staleness validation only makes sense against THIS
+        # process's routing — an entry keyed for another backend cannot
+        # be re-derived here, so it is returned as recorded.
+        if (backend or _backend()) == _backend() \
+                and entry.get("route") != cost.route:
+            # stale: the dispatch would no longer land this plan on the
+            # route it was cached against (e.g. a ref gap since closed
+            # by a new kernel, or a kernel route since gated away) —
+            # invalidate instead of replaying the old decision.
+            self.entries.pop(key, None)
+            return None
+        return PlanChoice(layer=layer, plan=plan, cost=cost,
                           measured_us=entry.get("us"))
 
     def put_choice(self, choice: PlanChoice, source: str,
@@ -94,6 +120,7 @@ class PlanCache:
         self.entries[choice_key(choice.layer, backend or _backend())] = {
             "plan": plan_to_dict(choice.plan),
             "score": choice.cost.score,
+            "route": choice.cost.route,
             "source": source,
             **({"us": choice.measured_us}
              if choice.measured_us is not None else {}),
@@ -179,26 +206,59 @@ def _layer_runner(layer: LayerSpec, plan: Plan, use_kernel: bool):
                                    use_kernel=use_kernel)
 
 
+def timing_shortlist(layer: LayerSpec, analytic: PlanChoice) -> List[Plan]:
+    """The plans worth timing for a layer: the analytic top-k, minus
+    ref-routed candidates that a kernel-routed candidate with an
+    identical-or-better analytic score makes pointless to measure.
+    Routes come from the CostBreakdowns already baked into ``analytic``
+    (scored with the caller's ``use_kernel``).
+
+    An interpret-mode wall clock can rank the pure-jnp ref above a
+    kernel route (the interpreter is slow, XLA is not) — but serving a
+    ref "winner" means serving *no* packing at all, so a ref candidate
+    only stays on the shortlist when every kernel-routed candidate is
+    analytically more expensive.
+    """
+    cands = [(analytic.plan, analytic.cost)] + list(analytic.alternatives)
+    kernel_best = min((c.score for _, c in cands if c.route != "ref"),
+                      default=None)
+    out: List[Plan] = []
+    for plan, cost in cands:
+        if cost.route == "ref" and kernel_best is not None \
+                and kernel_best <= cost.score:
+            continue
+        out.append(plan)
+    return out
+
+
 def autotune_layer(layer: LayerSpec, *, cache: Optional[PlanCache] = None,
                    top_k: int = 3, repeats: int = 2,
                    use_kernel: bool = True) -> PlanChoice:
     """Time the analytic top-k through the real kernels; return the
-    fastest as the choice (cache-backed, cached timings are reused)."""
+    fastest as the choice (cache-backed, cached timings are reused;
+    timing entries whose recorded dispatch route went stale are
+    re-measured)."""
     analytic = choose_plan(layer, use_kernel=use_kernel, top_k=top_k)
-    shortlist: List[Plan] = [analytic.plan] \
-        + [p for p, _ in analytic.alternatives]
+    shortlist = timing_shortlist(layer, analytic)
     backend = _backend()
     timed = []
     for plan in shortlist:
+        route, _ = route_for(layer, plan, use_kernel)
         key = timing_key(layer, plan, backend)
         entry = cache.entries.get(key) if cache is not None else None
+        if entry is not None and entry.get("route") != route:
+            # stale: routing changed since this timing was recorded —
+            # the measured number belongs to a different kernel.
+            cache.entries.pop(key, None)
+            entry = None
         if entry is not None:
             us = entry["us"]
         else:
             us = _time_us(_layer_runner(layer, plan, use_kernel), repeats)
             if cache is not None:
                 cache.entries[key] = {"us": us,
-                                      "plan": plan_to_dict(plan)}
+                                      "plan": plan_to_dict(plan),
+                                      "route": route}
         timed.append((us, plan))
     timed.sort(key=lambda t: t[0])
     best_us, best = timed[0]

@@ -56,7 +56,8 @@ def plan_layers(layers: Sequence[LayerSpec], *, policy: str = "auto",
             choice = PlanChoice(layer=layer, plan=plan,
                                 cost=score_plan(layer, plan, use_kernel))
         else:
-            choice = cache.get_choice(layer) if policy == "cache" else None
+            choice = cache.get_choice(layer, use_kernel=use_kernel) \
+                if policy == "cache" else None
             if choice is None:
                 if autotune:
                     choice = autotune_layer(layer, cache=cache,

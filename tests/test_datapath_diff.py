@@ -1,0 +1,350 @@
+"""Cross-datapath differential test harness.
+
+The paper's central claim is that pre-adder packing works on *any* wide
+datapath; this file is the executable version of that claim for the
+dispatch layer:
+
+  * ROUTE INVARIANTS (no kernels run): for every plan the planner can
+    emit — every bit config x datapath x packing factor x guard bits x
+    signedness — the dispatch route, the cost-model route and the
+    explain reason must agree, and no implemented datapath may fall
+    back to ref with an "unimplemented" reason.  This is the drift
+    detector between ``planner/cost.py`` and ``kernels/ops.py``.
+  * EXECUTION SWEEP: every enumerable plan for representative bit
+    configs runs through ``packed_conv2d`` / ``packed_matmul`` and is
+    asserted bit-exact against ``ref.conv2d_int_ref`` / the integer
+    GEMM oracle — the INT32 lane, the FP32M fp32 word and the
+    DSP48E2/DSP58 int64 emulation words all through the same kernel
+    bodies.  A future kernel change that silently corrupts one
+    datapath fails here by name.
+  * HYPOTHESIS SWEEP: arbitrary (w_k, w_i) pairs on random datapaths
+    through the conv dispatch.
+
+conftest.py enables ``jax_enable_x64`` (the int64 emulation words need
+it); the backend is CPU interpret mode.
+"""
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import planner
+from repro.core.datapath import (BSEGPlan, DATAPATHS, INT32, SDVPlan,
+                                 plan_bseg)
+from repro.kernels import ops, ref
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:
+    # hypothesis is an optional dev dependency (requirements-dev.txt);
+    # the deterministic sweeps below still run.
+    class _SkipGiven:
+        def given(self, *a, **k):
+            return lambda fn: pytest.mark.skip(
+                reason="hypothesis not installed")(fn)
+
+        def settings(self, *a, **k):
+            return lambda fn: fn
+
+        def assume(self, *a, **k):
+            raise RuntimeError("unreachable: test body is skipped")
+
+    class _SkipStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    hypothesis = _SkipGiven()
+    st = _SkipStrategies()
+
+RNG = np.random.default_rng(41)
+
+#: datapaths whose conv kernels this repo implements (all of them —
+#: the PR-4 acceptance surface).  A conv plan with w_i <= 7 and odd
+#: taps on any of these must land on a kernel route, never ref.
+CONV_IMPLEMENTED = ("int32", "fp32m", "dsp48e2", "dsp58")
+#: datapaths the SDV GEMM kernels implement (int32 storage words).
+MATMUL_KERNEL_DATAPATHS = ("int32",)
+
+# every (w_bits, a_bits) config the invariant sweep enumerates
+BIT_CONFIGS = [(4, 4), (3, 5), (5, 2), (2, 2), (4, 8), (8, 8)]
+
+
+def _conv_layer(wb, ab, *, h=3, w=5, cin=2, cout=3, k=3):
+    return planner.conv2d_spec(f"c{wb}a{ab}", h, w, cin, cout, k, k,
+                               w_bits=wb, a_bits=ab)
+
+
+def _mm_layer(wb, ab):
+    return planner.matmul_spec(f"m{wb}a{ab}", 4, 12, 10, w_bits=wb,
+                               a_bits=ab, a_signed=False)
+
+
+def _plan_id(plan):
+    d = planner.plan_to_dict(plan)
+    return "-".join(f"{k}{v}" for k, v in sorted(d.items()))
+
+
+# ---------------------------------------------------------------------------
+# route invariants: cost model == dispatch, no silent "unimplemented"
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wb,ab", BIT_CONFIGS)
+def test_conv_route_explain_invariants(wb, ab):
+    """For every enumerable conv plan: (1) the cost model's route is
+    the dispatch route, (2) implemented datapaths never return a
+    ref-because-unimplemented reason, (3) ref reasons name a real
+    constraint."""
+    layer = _conv_layer(wb, ab)
+    x_shape = (layer.rows, layer.h, layer.w, layer.c_in)
+    w_shape = (layer.c_out, layer.c_in, layer.kh, layer.kw)
+    plans = planner.enumerate_plans(layer)
+    assert plans, (wb, ab)
+    for plan in plans:
+        route, reason = planner.route_for(layer, plan)
+        cost = planner.score_plan(layer, plan)
+        assert cost.route == route and cost.reason == reason, plan
+        if isinstance(plan, BSEGPlan):
+            disp = ops.select_conv_route(x_shape, w_shape, plan=plan,
+                                         explain=True)
+            assert disp == (route, reason), plan
+            if plan.w_i <= 7:
+                # the conv datapath gap is closed: every implemented
+                # word lands on a kernel route
+                assert plan.spec.name in CONV_IMPLEMENTED
+                assert route in ("bseg_conv2d", "bseg_conv1d", "im2col"), \
+                    (plan, route, reason)
+            else:
+                assert route == "ref" and "int8" in reason, (plan, reason)
+        else:
+            # SDV conv candidates lower to an im2col GEMM; only the
+            # int32 word has SDV kernel storage
+            if plan.spec.name in MATMUL_KERNEL_DATAPATHS:
+                assert route == "im2col", (plan, route, reason)
+            else:
+                assert route == "ref", (plan, route, reason)
+
+
+@pytest.mark.parametrize("wb,ab", BIT_CONFIGS)
+def test_conv1d_route_explain_invariants(wb, ab):
+    layer = planner.conv1d_spec(f"d{wb}a{ab}", 8, 4, w_bits=wb, a_bits=ab,
+                                seq=16)
+    for plan in planner.enumerate_plans(layer):
+        route, reason = planner.route_for(layer, plan)
+        cost = planner.score_plan(layer, plan)
+        assert cost.route == route and cost.reason == reason, plan
+        assert ops.select_conv1d_route(plan, explain=True) == \
+            (route, reason), plan
+        if plan.w_i <= 7:
+            assert route == "bseg_conv1d", (plan, route, reason)
+        else:
+            assert route == "ref" and "int8" in reason, (plan, reason)
+
+
+@pytest.mark.parametrize("wb,ab", BIT_CONFIGS)
+def test_matmul_route_explain_invariants(wb, ab):
+    """The matmul side keeps its (documented) int32-only kernel gate:
+    the reason must say so, and cost/dispatch must agree."""
+    layer = _mm_layer(wb, ab)
+    for plan in planner.enumerate_plans(layer):
+        route, reason = planner.route_for(layer, plan)
+        cost = planner.score_plan(layer, plan)
+        assert cost.route == route and cost.reason == reason, plan
+        assert ops.select_packed_route(layer.rows, plan=plan,
+                                       explain=True) == (route, reason)
+        if plan.spec.name in MATMUL_KERNEL_DATAPATHS:
+            assert route in ("sdv_matmul", "sdv_matvec"), (plan, route)
+        else:
+            assert route == "ref", (plan, route)
+            assert ("int32" in reason) or ("fp32" in reason), reason
+
+
+def test_planner_choice_route_matches_dispatch():
+    """The route recorded in every PlanChoice equals what the dispatch
+    would do with the chosen plan (UltraNet, all 9 layers)."""
+    for c in planner.plan_ultranet(32, first_layer_a_bits=8):
+        route, reason = planner.route_for(c.layer, c.plan)
+        assert c.cost.route == route and c.cost.reason == reason, c.layer
+
+
+def test_ultranet_planner_selects_non_int32_datapath():
+    """PR-4 acceptance: with the conv gap closed, at least one UltraNet
+    layer chooses a non-INT32 datapath plan on a kernel route."""
+    choices = planner.plan_ultranet(32, first_layer_a_bits=8)
+    wide = [c for c in choices if c.plan.spec.name != "int32"]
+    assert wide, [c.plan.spec.name for c in choices]
+    for c in wide:
+        assert c.cost.route != "ref", (c.layer.name, c.cost.reason)
+
+
+# ---------------------------------------------------------------------------
+# execution sweep: every enumerable plan, bit-exact vs the oracles
+# ---------------------------------------------------------------------------
+
+_CONV_EXEC_LAYER = _conv_layer(4, 4)
+_CONV_EXEC_PLANS = [p for p in planner.enumerate_plans(_CONV_EXEC_LAYER)
+                    if isinstance(p, BSEGPlan)]
+
+
+@pytest.mark.parametrize(
+    "plan", _CONV_EXEC_PLANS,
+    ids=[_plan_id(p) for p in _CONV_EXEC_PLANS])
+def test_conv2d_datapath_diff(plan):
+    """Every enumerable W4A4 BSEG conv plan through ``packed_conv2d``
+    (auto route) == the integer conv oracle — both signedness regimes
+    (zero point on/off, alternating deterministically per plan)."""
+    ly = _CONV_EXEC_LAYER
+    zp = (1 << (plan.w_i - 1)) if (plan.lane + plan.n_k) % 2 else 0
+    rng = np.random.default_rng(zlib.crc32(_plan_id(plan).encode()))
+    x = jnp.asarray(rng.integers(-zp, (1 << plan.w_i) - zp,
+                                 (1, ly.h, ly.w, ly.c_in)), jnp.int32)
+    w = jnp.asarray(rng.integers(-(1 << (plan.w_k - 1)),
+                                 1 << (plan.w_k - 1),
+                                 (ly.c_out, ly.c_in, ly.kh, ly.kw)),
+                    jnp.int8)
+    route = ops.select_conv_route(x.shape, w.shape, plan=plan)
+    assert route != "ref", plan        # the gap stays closed
+    y = ops.packed_conv2d(x, w, plan=plan, mode="auto", zero_point=zp)
+    want = np.asarray(ref.conv2d_int_ref(x, w))
+    assert (np.asarray(y) == want).all(), (plan, route)
+
+
+@pytest.mark.parametrize("spec_name", CONV_IMPLEMENTED)
+def test_conv1d_datapath_diff(spec_name):
+    """The causal depthwise conv kernel on each datapath's chosen plans
+    (top-k shortlist) == the causal correlation oracle."""
+    layer = planner.conv1d_spec("d", 6, 4, w_bits=4, a_bits=4, seq=13)
+    choice = planner.choose_plan(
+        layer, candidates=planner.enumerate_plans(
+            layer, specs=[DATAPATHS[spec_name]]), top_k=3)
+    plans = [choice.plan] + [p for p, _ in choice.alternatives]
+    taps = jnp.asarray(RNG.integers(-8, 8, (6, 4)))
+    xq = jnp.asarray(RNG.integers(-8, 8, (2, 13, 6)), jnp.int8)
+    want = np.asarray(ref.conv1d_causal_ref(xq, taps))
+    for plan in plans:
+        assert ops.select_conv1d_route(plan) == "bseg_conv1d", plan
+        kappa, tsum = ops.prepare_bseg_taps(taps, plan)
+        y = ops.bseg_conv1d(xq, kappa, tsum, plan=plan, n_taps=4,
+                            zero_point=8, use_kernel=True)
+        assert (np.asarray(y) == want).all(), plan
+
+
+_MM_EXEC_LAYER = _mm_layer(4, 4)
+_MM_EXEC_PLANS = planner.enumerate_plans(_MM_EXEC_LAYER)
+
+
+@pytest.mark.parametrize(
+    "plan", _MM_EXEC_PLANS,
+    ids=[_plan_id(p) for p in _MM_EXEC_PLANS])
+def test_matmul_datapath_diff(plan):
+    """Every enumerable W4A4 SDV plan through ``packed_matmul`` (auto
+    route: int32 words on the kernels, wide words on the int64-safe
+    jnp ref decode) == the integer GEMM oracle."""
+    ly = _MM_EXEC_LAYER
+    rng = np.random.default_rng(zlib.crc32(_plan_id(plan).encode()))
+    w_int = jnp.asarray(rng.integers(-(1 << (plan.w_a - 1)),
+                                     1 << (plan.w_a - 1),
+                                     (ly.m, ly.k)))
+    lo, hi = ((-(1 << (plan.w_b - 1)), 1 << (plan.w_b - 1))
+              if plan.signed_b else (0, 1 << plan.w_b))
+    x = jnp.asarray(rng.integers(lo, hi, (ly.rows, ly.k)), jnp.int32)
+    words = ops.prepare_sdv_weights(w_int, plan)
+    y = ops.packed_matmul(x, words, plan=plan, m=ly.m)
+    want = np.asarray(x) @ np.asarray(w_int).T
+    assert (np.asarray(y) == want).all(), plan
+
+
+def test_conv2d_full_word_wrapped_bias_plan():
+    """Edge of the exact-wrap regime: a hand-dimensioned INT32 plan
+    whose biased accumulation word occupies ALL 32 bits (the top lane's
+    guard bias lands on the sign bit and wraps).  Mod-2^32 wrap is
+    value-preserving under the mask-based extraction, so the kernel
+    must stay exact."""
+    plan = plan_bseg(INT32, 4, 4, n_k=2, n_i=1, lane=16)
+    assert plan.n_lanes * plan.lane == 32
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(0, 16, (1, 4, 7, 2)), jnp.int32)
+    w = jnp.asarray(rng.integers(-8, 8, (3, 2, 3, 3)), jnp.int8)
+    want = np.asarray(ref.conv2d_int_ref(x, w))
+    y = ops.packed_conv2d(x, w, plan=plan, mode="bseg_conv2d",
+                          zero_point=0)
+    assert (np.asarray(y) == want).all()
+
+
+def test_plan_bseg_rejects_biased_word_overrun():
+    """The dimensioning must refuse guard-swept lanes whose biased
+    accumulation word exceeds the accumulator width (the latent
+    overflow this harness originally caught: INT32 2x2 with lane 11
+    puts the top lane's bias on bit 32) — and the route selectors must
+    reject a hand-built plan that bypasses ``plan_bseg``, instead of
+    tripping a kernel-internal assert."""
+    with pytest.raises(ValueError):
+        plan_bseg(INT32, 4, 4, n_k=2, n_i=2, lane=11)
+    for plan in planner.enumerate_plans(_CONV_EXEC_LAYER):
+        if isinstance(plan, BSEGPlan):
+            assert plan.n_lanes * plan.lane <= plan.spec.w_word, plan
+    bad = BSEGPlan(spec=INT32, w_k=4, w_i=4, lane=11, n_k=2, n_i=2,
+                   w_l=6)
+    route, reason = ops.select_conv_route(
+        (1, 4, 6, 2), (3, 2, 3, 3), plan=bad, explain=True)
+    assert route == "ref" and "accumulator word" in reason
+    route, reason = ops.select_conv1d_route(bad, explain=True)
+    assert route == "ref" and "accumulator word" in reason
+    with pytest.raises(ValueError, match="accumulator word"):
+        ops.select_conv_route((1, 4, 6, 2), (3, 2, 3, 3), plan=bad,
+                              mode="bseg_conv2d")
+
+
+def test_conv_sdv_plan_overrides_bit_exact():
+    """Planner SDV choices for convs (the im2col override path) on the
+    int32 word: every enumerable override == the conv oracle."""
+    ly = _CONV_EXEC_LAYER
+    base = plan_bseg(INT32, ly.w_bits, ly.a_bits)
+    x = jnp.asarray(RNG.integers(0, 16, (1, ly.h, ly.w, ly.c_in)),
+                    jnp.int32)
+    w = jnp.asarray(RNG.integers(-8, 8, (ly.c_out, ly.c_in, 3, 3)),
+                    jnp.int8)
+    want = np.asarray(ref.conv2d_int_ref(x, w))
+    overrides = [p for p in planner.enumerate_sdv_plans(ly, specs=[INT32])]
+    assert overrides
+    for sdv in overrides:
+        y = ops.packed_conv2d(x, w, plan=base, mode="im2col",
+                              zero_point=0, sdv_plan=sdv)
+        assert (np.asarray(y) == want).all(), sdv
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: arbitrary bitwidth pairs x datapaths through the dispatch
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    wk=st.integers(min_value=2, max_value=6),
+    wi=st.integers(min_value=2, max_value=6),
+    spec_name=st.sampled_from(CONV_IMPLEMENTED),
+    use_zp=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_conv_datapath_property(wk, wi, spec_name, use_zp, seed):
+    """Arbitrary bitwidth pairs on arbitrary datapaths: whatever
+    ``plan_bseg`` dimensions must run bit-exact through the dispatch."""
+    spec = DATAPATHS[spec_name]
+    try:
+        plan = plan_bseg(spec, wk, wi)
+    except ValueError:
+        hypothesis.assume(False)
+        return
+    hypothesis.assume(plan.w_i <= 7)
+    rng = np.random.default_rng(seed)
+    h, w = int(rng.integers(1, 5)), int(rng.integers(1, 9))
+    cin, cout = int(rng.integers(1, 4)), int(rng.integers(1, 4))
+    zp = (1 << (wi - 1)) if use_zp else 0
+    x = jnp.asarray(rng.integers(-zp, (1 << wi) - zp, (1, h, w, cin)),
+                    jnp.int32)
+    wt = jnp.asarray(rng.integers(-(1 << (wk - 1)), 1 << (wk - 1),
+                                  (cout, cin, 3, 3)), jnp.int32)
+    want = np.asarray(ref.conv2d_int_ref(x, wt))
+    y = ops.packed_conv2d(x, wt, plan=plan, mode="bseg_conv2d",
+                          zero_point=zp)
+    assert (np.asarray(y) == want).all(), plan

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.datapath import FP32M, INT32, plan_bseg
+from repro.core.datapath import DATAPATHS, FP32M, INT32, plan_bseg
 from repro.kernels import ops, ref
 from repro.kernels.bseg_conv2d import bseg_conv2d_num_multiplies
 from repro.models import ultranet as U
@@ -130,6 +130,7 @@ def test_bseg_conv1d_same_vs_causal_padding():
 def test_conv_dispatch_table_auto():
     sel = ops.select_conv_route
     fp32m = plan_bseg(FP32M, 4, 4)
+    dsp = plan_bseg(DATAPATHS["dsp48e2"], 4, 4)
     # (x shape, w shape, plan, backend) -> intended kernel
     assert sel((1, 8, 8, 3), (16, 3, 3, 3), plan=PLAN) == "bseg_conv2d"
     assert sel((1, 8, 8, 64), (36, 64, 1, 1), plan=PLAN) == "im2col"
@@ -137,8 +138,14 @@ def test_conv_dispatch_table_auto():
     # no pallas backend -> pure-jnp integer conv
     assert sel((1, 8, 8, 3), (16, 3, 3, 3), plan=PLAN,
                use_kernel=False) == "ref"
-    # fp32m rounds past the mantissa: int32 wrap invalid -> ref
-    assert sel((1, 8, 8, 3), (16, 3, 3, 3), plan=fp32m) == "ref"
+    # the kernels are word-generic: fp32m (guard bits make fp32 exact)
+    # and the int64 emulation words run on the bseg routes
+    assert sel((1, 8, 8, 3), (16, 3, 3, 3), plan=fp32m) == "bseg_conv2d"
+    assert sel((1, 8, 8, 3), (16, 3, 3, 3), plan=dsp) == "bseg_conv2d"
+    assert sel((2, 4, 16, 8), (8, 1, 1, 5), plan=fp32m) == "bseg_conv1d"
+    # ... including 1x1, whose SDV-GEMM lowering would need int32 words
+    assert sel((1, 8, 8, 64), (36, 64, 1, 1), plan=fp32m) == "bseg_conv2d"
+    assert sel((1, 8, 8, 64), (36, 64, 1, 1), plan=dsp) == "bseg_conv2d"
     # even kernels have no stride-1 'same' pad -> ref, depthwise included
     assert sel((1, 8, 8, 3), (16, 3, 2, 2), plan=PLAN) == "ref"
     assert sel((2, 4, 16, 8), (8, 1, 1, 4), plan=PLAN) == "ref"
@@ -150,8 +157,15 @@ def test_conv_dispatch_table_explicit_modes():
     assert sel((1, 8, 8, 3), (16, 3, 3, 3), plan=PLAN,
                mode="im2col") == "im2col"
     assert sel((1, 8, 8, 3), (16, 3, 3, 3), plan=PLAN, mode="ref") == "ref"
+    # explicit bseg modes accept the non-int32 words now ...
+    assert sel((1, 8, 8, 3), (16, 3, 3, 3), plan=fp32m,
+               mode="bseg_conv2d") == "bseg_conv2d"
+    # ... but im2col still computes on int32 SDV storage words
     with pytest.raises(ValueError):
-        sel((1, 8, 8, 3), (16, 3, 3, 3), plan=fp32m, mode="bseg_conv2d")
+        sel((1, 8, 8, 3), (16, 3, 3, 3), plan=fp32m, mode="im2col")
+    with pytest.raises(ValueError):
+        sel((1, 8, 8, 3), (16, 3, 3, 3),
+            plan=plan_bseg(DATAPATHS["dsp58"], 4, 4), mode="im2col")
     with pytest.raises(ValueError):
         sel((1, 8, 8, 3), (16, 3, 2, 2), plan=PLAN, mode="bseg_conv2d")
     with pytest.raises(ValueError):        # not a depthwise shape

@@ -196,16 +196,22 @@ def test_no_int32_default_still_plans_and_renders():
 
 def test_conv1d_route_selector_shared_gates():
     assert ops.select_conv1d_route(plan_bseg(INT32, 4, 4)) == "bseg_conv1d"
+    # the conv kernels are word-generic now: the int64 emulation words
+    # land on the kernel route (x64 is on in conftest, backend is CPU)
     route, reason = ops.select_conv1d_route(
         plan_bseg(DATAPATHS["dsp48e2"], 4, 4), explain=True)
-    assert route == "ref" and "int32" in reason
+    assert route == "bseg_conv1d" and "dsp48e2" in reason
     route, reason = ops.select_conv1d_route(plan_bseg(INT32, 4, 4),
                                             use_kernel=False, explain=True)
     assert route == "ref"
+    # w_i > 7 still cannot stage int8 activations
+    route, reason = ops.select_conv1d_route(
+        plan_bseg(DATAPATHS["dsp48e2"], 2, 8), explain=True)
+    assert route == "ref" and "int8" in reason
     # the planner cost model goes through the same selector
     layer = planner.conv1d_spec("c", 32, 4, w_bits=4, a_bits=4)
     cost = planner.score_plan(layer, plan_bseg(DATAPATHS["dsp58"], 4, 4))
-    assert cost.route == "ref" and "int32" in cost.reason
+    assert cost.route == "bseg_conv1d" and cost.density > 1
 
 
 def test_choose_plan_deterministic_and_alternatives():
@@ -227,19 +233,20 @@ def test_route_explain_tuples():
         (1, 8, 8, 3), (16, 3, 3, 3), plan=plan_bseg(INT32, 4, 4),
         explain=True)
     assert route == "bseg_conv2d"
-    # int64-word datapaths: auto -> ref with a reason, explicit raises
+    # int64-word datapaths on the MATMUL side: auto -> ref with a
+    # reason, explicit raises (the SDV GEMM kernels are still int32)
     dsp = plan_sdv(DATAPATHS["dsp58"], 4, 8, park_sign_bits=True)
     route, reason = ops.select_packed_route(64, plan=dsp, explain=True)
     assert route == "ref" and "int32" in reason
     with pytest.raises(ValueError):
         ops.select_packed_route(64, plan=dsp, mode="sdv_matmul")
+    # ... while the CONV side runs them on the word-generic kernels
     bdsp = plan_bseg(DATAPATHS["dsp48e2"], 4, 4)
     route, reason = ops.select_conv_route((1, 8, 8, 3), (16, 3, 3, 3),
                                           plan=bdsp, explain=True)
-    assert route == "ref" and "int32" in reason
-    with pytest.raises(ValueError):
-        ops.select_conv_route((1, 8, 8, 3), (16, 3, 3, 3), plan=bdsp,
-                              mode="bseg_conv2d")
+    assert route == "bseg_conv2d" and "dsp48e2" in reason
+    assert ops.select_conv_route((1, 8, 8, 3), (16, 3, 3, 3), plan=bdsp,
+                                 mode="bseg_conv2d") == "bseg_conv2d"
 
 
 # ---------------------------------------------------------------------------
@@ -390,6 +397,133 @@ def test_plan_cache_corrupt_file_starts_fresh(tmp_path):
     path.write_text("{not json")
     cache = planner.PlanCache.load(str(path))
     assert cache.entries == {}
+
+
+def _synthetic_timing_cache(tmp_path, layer, plans, us_values,
+                            use_kernel=True):
+    """A PlanCache pre-loaded with timing entries for ``plans`` (no
+    kernel ever runs) — the TPU-free autotune fixture."""
+    from repro.planner import autotune as at
+    cache = planner.PlanCache(path=str(tmp_path / "tune.json"))
+    backend = at._backend()
+    for plan, us in zip(plans, us_values):
+        route, _ = planner.route_for(layer, plan, use_kernel)
+        cache.entries[planner.timing_key(layer, plan, backend)] = {
+            "us": us, "plan": planner.plan_to_dict(plan), "route": route}
+    return cache
+
+
+def test_autotune_tiebreaks_ultranet_body_by_measured_time(tmp_path):
+    """ROADMAP item 'planner wall-clock calibration': when a cache
+    supplies timings, the UltraNet 3x3 body choice follows measured
+    time, not the analytic score — including overturning the analytic
+    winner — without touching a TPU (every shortlist timing is a
+    synthetic cache hit, so no kernel runs)."""
+    layer = planner.ultranet_layer_specs(32)[2]       # a 3x3 body conv
+    assert layer.kh == layer.kw == 3
+    analytic = planner.choose_plan(layer, top_k=3)
+    shortlist = planner.timing_shortlist(layer, analytic)
+    assert len(shortlist) >= 2
+    # make the analytically-WORST shortlisted plan the fastest
+    us = [100.0 * (i + 1) for i in range(len(shortlist))][::-1]
+    cache = _synthetic_timing_cache(tmp_path, layer, shortlist, us)
+    n_before = len(cache.entries)
+    choice = planner.autotune_layer(layer, cache=cache, top_k=3,
+                                    repeats=1)
+    assert choice.plan == shortlist[-1] != analytic.plan
+    assert choice.measured_us == min(us)
+    # pure cache replay: only the choice| entry was added
+    assert len(cache.entries) == n_before + 1
+    # and the persisted choice round-trips with its route recorded
+    cached = cache.get_choice(layer)
+    assert cached is not None and cached.plan == choice.plan
+    assert cached.measured_us == choice.measured_us
+
+
+def test_autotune_shortlist_skips_ref_routed_candidates():
+    """Timing shortlists must drop ref-routed candidates whenever a
+    kernel-routed candidate with an identical-or-better analytic score
+    exists (an interpret-mode ref 'win' would serve no packing at
+    all), and keep them when ref is all there is."""
+    layer = planner.conv2d_spec("c", 8, 8, 4, 8, 3, 3, w_bits=4, a_bits=4)
+    analytic = planner.choose_plan(layer, top_k=3)
+    shortlist = planner.timing_shortlist(layer, analytic)
+    for plan in shortlist:
+        route, _ = planner.route_for(layer, plan)
+        assert route != "ref", plan
+    # a config where every candidate refs (W12A12 conv: no kernel
+    # route exists) keeps its shortlist rather than emptying it
+    wide = planner.conv2d_spec("c", 4, 4, 2, 2, 3, 3, w_bits=12,
+                               a_bits=12)
+    analytic_w = planner.choose_plan(wide, top_k=3)
+    short_w = planner.timing_shortlist(wide, analytic_w)
+    assert short_w, "all-ref shortlist must not be empty"
+
+
+def test_plan_cache_invalidates_stale_routes(tmp_path):
+    """Cache entries recorded against a route the dispatch no longer
+    picks must be invalidated, not replayed — the stale-cache hazard
+    when a PR changes routing (e.g. this one closing the conv gap)."""
+    from repro.planner import autotune as at
+    layer = planner.conv2d_spec("c", 8, 8, 4, 8, 3, 3, w_bits=4, a_bits=4)
+    choice = planner.choose_plan(layer)
+    backend = at._backend()
+    cache = planner.PlanCache(path=str(tmp_path / "stale.json"))
+    # a choice entry whose recorded route pretends the plan still refs
+    cache.entries[at.choice_key(layer, backend)] = {
+        "plan": planner.plan_to_dict(choice.plan),
+        "score": choice.cost.score, "route": "ref", "source": "analytic"}
+    assert cache.get_choice(layer) is None          # invalidated ...
+    assert at.choice_key(layer, backend) not in cache.entries  # ... eagerly
+    # a fresh put/get with the live route round-trips
+    cache.put_choice(choice, source="analytic", backend=backend)
+    got = cache.get_choice(layer)
+    assert got is not None and got.plan == choice.plan
+    # legacy entries without a recorded route are stale by definition
+    cache.entries[at.choice_key(layer, backend)].pop("route")
+    assert cache.get_choice(layer) is None
+
+
+def test_plan_cache_choice_hits_under_use_kernel_false(tmp_path):
+    """A choice stored under use_kernel=False (everything refs) must
+    hit when read back with the same context — validation must not
+    evict entries recorded under a different kernel capability — and
+    entries keyed for another backend are returned as recorded."""
+    from repro.planner import autotune as at
+    layer = planner.conv2d_spec("c", 8, 8, 4, 8, 3, 3, w_bits=4, a_bits=4)
+    cache = planner.PlanCache(path=str(tmp_path / "nk.json"))
+    choice = planner.choose_plan(layer, use_kernel=False)
+    assert choice.cost.route == "ref"
+    cache.put_choice(choice, source="analytic")
+    assert cache.get_choice(layer, use_kernel=False) is not None
+    # ... and plan_layers(policy='cache', use_kernel=False) reuses it
+    out = planner.plan_layers([layer], policy="cache", cache=cache,
+                              use_kernel=False)
+    assert out[0].plan == choice.plan and out[0].cost.route == "ref"
+    # cross-backend entries cannot be re-validated here: no eviction
+    cache.entries[at.choice_key(layer, "tpu")] = {
+        "plan": planner.plan_to_dict(choice.plan),
+        "score": choice.cost.score, "route": "bseg_conv2d",
+        "source": "autotune"}
+    assert cache.get_choice(layer, backend="tpu") is not None
+
+
+def test_autotune_retimes_stale_timing_entries(tmp_path):
+    """A timing entry whose recorded route went stale is re-measured
+    (the cached microseconds belong to a different kernel)."""
+    from repro.planner import autotune as at
+    layer = planner.matmul_spec("p", 4, 24, 12, w_bits=4, a_bits=8)
+    analytic = planner.choose_plan(layer, top_k=1)
+    backend = at._backend()
+    key = planner.timing_key(layer, analytic.plan, backend)
+    cache = planner.PlanCache(path=str(tmp_path / "retime.json"))
+    cache.entries[key] = {"us": 1e-9,
+                          "plan": planner.plan_to_dict(analytic.plan),
+                          "route": "ref"}           # stale route
+    choice = planner.autotune_layer(layer, cache=cache, top_k=1,
+                                    repeats=1)
+    assert cache.entries[key]["route"] != "ref"     # re-measured
+    assert choice.measured_us is not None and choice.measured_us > 1e-6
 
 
 # ---------------------------------------------------------------------------
