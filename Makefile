@@ -1,4 +1,5 @@
-.PHONY: test dev-deps planner-smoke planner-test test-datapaths
+.PHONY: test dev-deps planner-smoke planner-test test-datapaths \
+        serve-smoke test-serving
 
 # tier-1 verify (ROADMAP.md): the whole suite, fail-fast, quiet
 test:
@@ -15,6 +16,16 @@ planner-test: planner-smoke
 # datapath through the packed dispatch, bit-exact vs the oracles
 test-datapaths:
 	PYTHONPATH=src python -m pytest -q tests/test_datapath_diff.py
+
+# serving engine: tiny arch through the continuous batcher + Poisson
+# loadgen (scratch JSON, not the tracked BENCH_5), and its test file
+serve-smoke:
+	PYTHONPATH=src python -m repro.serving.loadgen --arch tinyllama-1.1b \
+	    --smoke --rates 40,120 --duration 0.5 --prompt-len 6 \
+	    --new-tokens 4 --batch 4 --buckets 16,32
+
+test-serving:
+	PYTHONPATH=src python -m pytest -q tests/test_serving.py
 
 dev-deps:
 	pip install -r requirements-dev.txt

@@ -1,0 +1,71 @@
+"""The serving engine end to end: heterogeneous requests through the
+continuous batcher, planner-bucketed packed decode, per-request
+latencies and the packed-multiply utilization report.
+
+A dozen requests with mixed prompt lengths and decode budgets arrive
+at once; the batcher coalesces them into two bucket shapes, the engine
+plans + warm-compiles each bucket once, sessions share each wave's KV
+cache (slots freed the moment a request finishes), and the metrics
+snapshot shows what the datapath actually achieved.
+
+Run:  PYTHONPATH=src python examples/serve_engine.py
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.models import init_params, values, Rules
+from repro.serving import Backpressure, BucketShape, Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--compute", choices=("sdv", "memory"), default="sdv")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()   # CPU-sized family backbone
+    rules = Rules(tp=None, fsdp=None, ep=None, batch=())
+    params = values(init_params(cfg, rules, jax.random.PRNGKey(0)))
+
+    engine = Engine(cfg, params, compute=args.compute,
+                    buckets=(BucketShape(4, 24), BucketShape(4, 48)))
+    print(f"{cfg.name}: {args.compute} compute, plan policy "
+          f"{engine.plan_policy}, buckets "
+          f"{[b.key for b in engine.buckets]}")
+
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        # short prompts land in the small bucket, long in the large one
+        pl = int(rng.integers(4, 32))
+        nt = int(rng.integers(4, 13))
+        try:
+            engine.submit(tuple(rng.integers(0, cfg.vocab, pl)), nt,
+                          deadline=engine.clock() + 30.0)
+        except Backpressure:
+            print("request shed (queue at budget)")
+
+    completions = engine.drain()
+    for c in sorted(completions, key=lambda c: c.rid):
+        print(f"  rid {c.rid:2d}  bucket {c.bucket_key}  "
+              f"prompt {c.prompt_len:2d} -> {len(c.tokens):2d} tokens  "
+              f"{c.latency_s * 1e3:7.1f} ms"
+              f"{'' if c.met_deadline else '  MISSED DEADLINE'}")
+
+    snap = engine.metrics.snapshot()
+    print(f"{snap['requests_completed']} requests, "
+          f"{snap['tokens_per_s']:.1f} tok/s, "
+          f"p50 {snap['latency']['p50_ms']:.1f} ms / "
+          f"p99 {snap['latency']['p99_ms']:.1f} ms, "
+          f"{snap['waves']['count']} waves")
+    for key, util in engine.plan_report().items():
+        print(f"bucket {key}: {util['kernel_routed_layers']}/"
+              f"{util['packed_layers']} packed layers on kernel routes, "
+              f"density {util['density_achieved']:.2f} MACs/multiply")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,47 @@ assert wide and all(l["route"] != "ref" for l in wide), wide
 print(f"BENCH_4.json ok: {p['non_int32_datapath_layers']} on "
       f"{sorted({l['datapath'] for l in wide})}")
 PY
+# serving smoke: a tiny arch through the engine + Poisson loadgen for
+# ~2s of offered load; the payload must be schema-valid and show at
+# least one bucket resolved onto a packed kernel route
+BENCH5_SMOKE="${TMPDIR:-/tmp}/bench5_smoke.json"
+python -m repro.serving.loadgen --arch tinyllama-1.1b --smoke \
+    --rates 40,120 --duration 0.5 --prompt-len 6 --new-tokens 4 \
+    --batch 4 --buckets 16,32 --json "$BENCH5_SMOKE"
+python - "$BENCH5_SMOKE" <<'PY'
+import json, sys
+payload = json.load(open(sys.argv[1]))
+assert payload["bench"] == "serving_engine", payload.get("bench")
+rates = {(c["compute"], c["rate_per_s"]) for c in payload["curves"]}
+assert len(rates) >= 4, rates          # 2 computes x 2 arrival rates
+for c in payload["curves"]:
+    assert c["requests_completed"] + c["requests_rejected"] > 0, c
+    assert c["latency"]["p50_ms"] >= 0 and c["tokens_per_s"] >= 0, c
+kernel_buckets = [k for k, u in payload["bucket_plans"].items()
+                  if u["kernel_routed_layers"] > 0]
+assert kernel_buckets, "no bucket resolved onto a packed kernel route"
+print(f"serving smoke ok: {sorted(rates)} -> kernel routes in "
+      f"{kernel_buckets}")
+PY
+# ... and the tracked BENCH_5 payload: latency/throughput curves for
+# >= 2 arrival rates on BOTH computes, with packed kernel routes
+python - BENCH_5.json <<'PY'
+import json, sys
+payload = json.load(open(sys.argv[1]))
+computes = {c["compute"] for c in payload["curves"]}
+assert {"sdv", "memory"} <= computes, computes
+for comp in ("sdv", "memory"):
+    rates = {c["rate_per_s"] for c in payload["curves"]
+             if c["compute"] == comp}
+    assert len(rates) >= 2, (comp, rates)
+    for c in payload["curves"]:
+        if c["compute"] == comp:
+            assert c["requests_completed"] > 0, c
+assert any(u["kernel_routed_layers"] > 0
+           for u in payload["bucket_plans"].values()), "no kernel route"
+print(f"BENCH_5.json ok: {sorted(computes)} x "
+      f"{sorted({c['rate_per_s'] for c in payload['curves']})} req/s")
+PY
 # bench smoke: the kernel benchmarks must RUN on tiny shapes (the
 # trajectory JSON goes to a scratch path, not the tracked BENCH_<pr>)
 BENCH_SMOKE="${TMPDIR:-/tmp}/bench_smoke.json"

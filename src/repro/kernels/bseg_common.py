@@ -162,6 +162,40 @@ def word_dtype(plan: BSEGPlan):
     return word_spec(plan).dtype
 
 
+def sdv_layout_bits(plan) -> int:
+    """Bits one SDV storage word actually uses: the packed field plus
+    the parked sign bits (signed-element layout only).  The single
+    copy of the layout rule — the route gate (``ops``) and the storage
+    spec below both consult it."""
+    return plan.packed_width + (plan.n if plan.signed_a else 0)
+
+
+@functools.lru_cache(maxsize=None)
+def sdv_word_spec(plan) -> WordSpec:
+    """The *storage*-word representation for an SDV plan's datapath:
+    int32 when both the datapath word and the storage layout
+    (``sdv_layout_bits``) fit 32 bits, int64 otherwise — the wide
+    DSP48E2/DSP58 emulation words, and also any hand-built plan whose
+    layout overruns its own datapath word (the route layer sends
+    those to ref; storing them in int64 keeps the jnp ref decode
+    lossless instead of failing at packing time).  SDV lanes carry no
+    guard bias — the bias constants are zero.
+
+    ``ops.prepare_sdv_weights`` and the GEMM/GEMV kernel bodies both
+    consult this spec, so layout and compute cannot drift.  The
+    storage encoding is always an integer bit-field pack — even for
+    FP32M plans, whose *compute* never reaches the SDV kernels
+    (``exact_wrap`` is False there: spill-over tracking relies on
+    exact mod-2^w wrap, so ``select_packed_route`` refuses fp32m and
+    the stored fields are only ever read back by the jnp ref decode).
+    """
+    spec = plan.spec
+    wide = spec.w_word > 32 or sdv_layout_bits(plan) > 32
+    return WordSpec(dtype_name="int64" if wide else "int32",
+                    width=spec.w_word, exact_wrap=spec.exact_wrap,
+                    bias_full=0, bias_top=0)
+
+
 def pack_iota(seg, plan: BSEGPlan, *, axis: int):
     """Pack ``n_i`` unsigned input samples (size-``n_i`` ``axis`` of
     ``seg``, any integer dtype) into one input factor per position, in

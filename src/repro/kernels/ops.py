@@ -11,10 +11,13 @@ Dispatch table for ``packed_matmul`` (mode -> kernel -> constraints):
   mode           kernel                      weight format      constraints
   -------------  --------------------------  -----------------  ------------------------------
   sdv_matmul     kernels/sdv_matmul (GEMM,   SDV storage words  integer x; ``plan`` given;
-                 grid R/br x G/bg x K/bk)    [K, G] int32       ``plan.spec.exact_wrap``;
+                 grid R/br x G/bg x K/bk)    [K, G] int32 or    ``plan.spec.exact_wrap``; the
+                                             int64 (wide        int64 emulation words need
+                                             DSP48E2/DSP58      x64 + CPU interpret (like the
+                                             emulation words)   BSEG conv kernels);
                                                                 rows > GEMV_MAX_ROWS in auto
   sdv_matvec     kernels/sdv_matvec (GEMV,   SDV storage words  integer x; ``plan`` given;
-                 grid B/bb x G/bg x K/bk)    [K, G] int32       ``plan.spec.exact_wrap``;
+                 grid B/bb x G/bg x K/bk)    [K, G] int32/64    same word gates as sdv_matmul;
                                                                 signed-element storage only;
                                                                 rows <= GEMV_MAX_ROWS in auto
   quant_matmul   kernels/quant_matmul        lane words         float x; no ``plan`` (memory
@@ -25,10 +28,9 @@ Dispatch table for ``packed_matmul`` (mode -> kernel -> constraints):
                                                                 False, the datapath is not
                                                                 exact-wrap (fp32m rounds, so
                                                                 SDV spill tracking is invalid),
-                                                                or the datapath word exceeds
-                                                                the kernels' int32 storage
-                                                                (dsp48e2/dsp58 emulation is
-                                                                int64 jnp-only)
+                                                                or the int64 emulation words
+                                                                cannot run (x64 off or a
+                                                                compiled TPU backend)
 
 ``mode="auto"`` picks the first row that satisfies its constraints, in
 the order ref-conditions -> sdv_matvec/sdv_matmul (by batch rows) ->
@@ -143,10 +145,10 @@ def quant_matmul(x: jnp.ndarray, w_packed: jnp.ndarray, scale: jnp.ndarray,
 
 def prepare_sdv_weights(w_int: jnp.ndarray, plan: SDVPlan) -> jnp.ndarray:
     """[M, K] ints (w_a-bit, signedness per ``plan.signed_a``) -> [K, G]
-    storage words — int32 for plans whose layout fits 32 bits (every
-    kernel-routed plan), int64 for the wide DSP48E2/DSP58 emulation
-    words (jnp-ref only; packing them into int32 would silently drop
-    the high fields).
+    storage words in the plan's word dtype
+    (``bseg_common.sdv_word_spec``) — int32 for plans whose layout fits
+    32 bits, int64 for the wide DSP48E2/DSP58 emulation words (packing
+    them into int32 would silently drop the high fields).
 
     Signed layout: sign-sliced remainder fields (D) in the low
     ``plan.packed_width`` bits, the n sign bits parked above — the two
@@ -156,9 +158,9 @@ def prepare_sdv_weights(w_int: jnp.ndarray, plan: SDVPlan) -> jnp.ndarray:
     m, k = w_int.shape
     n = plan.n
     g = -(-m // n)
-    layout_bits = plan.packed_width + (n if plan.signed_a else 0)
-    wdt = jnp.int32 if plan.spec.w_word <= 32 and layout_bits <= 32 \
-        else signed_split.require_dtype(jnp.int64)
+    wdt = bseg_common.sdv_word_spec(plan).dtype
+    if wdt == jnp.int64:
+        signed_split.require_dtype(jnp.int64)
     wp = jnp.pad(w_int, ((0, g * n - m), (0, 0))).reshape(g, n, k)
     word = jnp.zeros((g, k), wdt)
     if plan.signed_a:
@@ -210,6 +212,36 @@ GEMV_MAX_ROWS = 8
 _PACKED_MODES = ("auto", "sdv_matmul", "sdv_matvec", "quant_matmul", "ref")
 
 
+def _matmul_word_gate(plan: SDVPlan) -> Optional[str]:
+    """Why the SDV GEMM/GEMV kernels cannot represent this plan's word
+    on the current backend, or ``None`` when they can.
+
+    The kernels are word-generic (``bseg_common.sdv_word_spec``): int32
+    for layouts that fit the 32-bit TPU lane, int64 for the
+    DSP48E2/DSP58 emulation words.  The int64 representation needs
+    ``jax_enable_x64`` and a CPU interpret backend (the TPU vector
+    unit has no 64-bit path) — the same gate as the BSEG conv
+    kernels.  A hand-built plan whose storage layout (packed field +
+    parked sign bits) overruns the word is rejected here too, so it
+    degrades to ref / raises instead of tripping a kernel assert.
+    """
+    layout_bits = bseg_common.sdv_layout_bits(plan)
+    if layout_bits > plan.spec.w_word:
+        return (f"plan overruns the {plan.spec.name} storage word: "
+                f"packed field + parked sign bits = {layout_bits} bits "
+                f"> w_word={plan.spec.w_word}")
+    if plan.spec.w_word > 32 or layout_bits > 32:
+        if not _on_cpu():
+            return (f"datapath {plan.spec.name}: the int64 emulation "
+                    "words run interpret-only (no 64-bit vector path "
+                    "on this backend)")
+        if not jax.config.jax_enable_x64:
+            return (f"datapath {plan.spec.name} needs "
+                    f"{plan.spec.w_word}-bit words: enable "
+                    "jax_enable_x64 for the int64-emulation kernels")
+    return None
+
+
 def select_packed_route(rows: int, *, plan: Optional[SDVPlan] = None,
                         use_kernel: bool = True, mode: str = "auto",
                         explain: bool = False):
@@ -234,11 +266,9 @@ def select_packed_route(rows: int, *, plan: Optional[SDVPlan] = None,
             raise ValueError(
                 f"mode {mode!r} needs exact-wrap arithmetic; datapath "
                 f"{plan.spec.name} rounds (fp32)")
-        if plan.spec.w_word > 32:
-            raise ValueError(
-                f"mode {mode!r} stores int32 words; the {plan.spec.name} "
-                f"datapath needs {plan.spec.w_word}-bit words (int64 "
-                f"emulation lives in core/, jnp only)")
+        gate = _matmul_word_gate(plan)
+        if gate is not None:
+            raise ValueError(f"mode {mode!r}: {gate}")
         if mode == "sdv_matvec" and not plan.signed_a:
             raise ValueError(
                 "the GEMV kernel stores signed elements only (parked "
@@ -263,11 +293,9 @@ def select_packed_route(rows: int, *, plan: Optional[SDVPlan] = None,
     if not plan.spec.exact_wrap:
         return _r("ref", f"datapath {plan.spec.name} rounds (fp32): "
                          "SDV spill-over tracking is invalid")
-    if plan.spec.w_word > 32:
-        return _r("ref", f"datapath {plan.spec.name} needs "
-                         f"{plan.spec.w_word}-bit storage words: the "
-                         "Pallas kernels are int32 (int64 emulation is "
-                         "jnp-only)")
+    gate = _matmul_word_gate(plan)
+    if gate is not None:
+        return _r("ref", gate)
     if rows <= GEMV_MAX_ROWS and plan.signed_a:
         return _r("sdv_matvec",
                   f"{rows} rows <= GEMV_MAX_ROWS={GEMV_MAX_ROWS}: "

@@ -26,6 +26,16 @@ the spill totals live in VMEM scratch across K steps.  Rows are
 blocked at GEMM granularity (default 128) instead of the GEMV
 kernel's 8, and the activation block is row-major ``[br, bk]`` — no
 caller-side transpose.
+
+The body is *word-generic* (``bseg_common.sdv_word_spec``): int32 for
+plans whose storage layout fits the 32-bit TPU lane, int64 for the
+DSP48E2/DSP58 emulation words (48/58 bits live in a 64-bit integer;
+needs ``jax_enable_x64`` + a CPU interpret backend, exactly like the
+BSEG conv kernels' int64 path).  Every mask/shift below the datapath
+word width is value-preserving in either representation — int64 wrap
+at 2^64 and hardware wrap at 2^48 agree on all bits the Eq. 3
+extractor ever reads — so one body serves all exact-wrap datapaths.
+The spill totals and the lane outputs are tiny and stay int32.
 """
 from __future__ import annotations
 
@@ -37,6 +47,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.datapath import SDVPlan
+from . import bseg_common
 
 
 def _lsb2(d_word, sign_bits, i: int, lane: int, w_a: int, signed_a: bool):
@@ -50,23 +61,28 @@ def _lsb2(d_word, sign_bits, i: int, lane: int, w_a: int, signed_a: bool):
 
 def _body(plan_n: int, lane: int, w_a: int, signed_a: bool, signed: bool,
           sign_shift: int, nsteps_k: int, bk: int, x_k_axis: int,
+          word_dtype_name: str,
           x_ref, w_ref, o_ref, word_ref, spill_ref):
     """Shared GEMM/GEMV kernel body.
 
     ``x_k_axis`` selects the activation block layout: 1 for the GEMM's
     row-major ``[rows, bk]`` block, 0 for the GEMV's K-major
     ``[bk, rows]`` block (``kernels/sdv_matvec`` reuses this body).
+    ``word_dtype_name`` is the storage-word representation
+    (``bseg_common.sdv_word_spec``): int32, or int64 for the wide
+    DSP48E2/DSP58 emulation words.
     """
     k_step = pl.program_id(2)
     n = plan_n
+    wdt = jnp.dtype(word_dtype_name)
 
     @pl.when(k_step == 0)
     def _init():
         word_ref[...] = jnp.zeros_like(word_ref)
         spill_ref[...] = jnp.zeros_like(spill_ref)
 
-    xb = x_ref[...].astype(jnp.int32)     # [rows, bk] or [bk, rows]
-    wbw = w_ref[...]                      # [bk, bg] int32 storage words
+    xb = x_ref[...].astype(wdt)           # [rows, bk] or [bk, rows]
+    wbw = w_ref[...]                      # [bk, bg] storage words (wdt)
     d_mask = (1 << sign_shift) - 1
 
     def step(j, carry):
@@ -101,7 +117,8 @@ def _body(plan_n: int, lane: int, w_a: int, signed_a: bool, signed: bool,
             mm = (obs - prev - p4) & 3
             # signed products spill [-1, 1]; unsigned spill [0, 2]
             delta = jnp.where(mm == 3, -1, mm) if signed else mm
-            new_spills.append(spills[..., i - 1] + delta)
+            new_spills.append(spills[..., i - 1]
+                              + delta.astype(jnp.int32))
         spills = jnp.stack(new_spills, axis=-1)                       # [br,bg,n]
         return word2, spills
 
@@ -119,7 +136,10 @@ def _body(plan_n: int, lane: int, w_a: int, signed_a: bool, signed: bool,
             field = (word >> (i * lane)) & mask
             s_i = spills[..., i]
             s_prev = spills[..., i - 1] if i > 0 else 0
-            outs.append((s_i << lane) + field - s_prev)
+            # lane results are exact dot products that fit int32 on
+            # every plan; the wide-word path computes them in int64
+            outs.append(((s_i << lane) + field - s_prev)
+                        .astype(jnp.int32))
         o_ref[...] = jnp.stack(outs, axis=-1)                         # [br,bg,n]
 
 
@@ -133,8 +153,10 @@ def sdv_matmul(x_q: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
     Args:
       x_q: [R, K] integer activations (row-major), values within w_b
         bits (signed or unsigned per ``plan.signed_b``).
-      w_words: [K, G] int32 storage words (``prepare_sdv_weights``).
-      plan: SDV lane plan on the INT32 datapath.
+      w_words: [K, G] storage words (``prepare_sdv_weights``) in the
+        plan's word dtype — int32, or int64 for wide (DSP48E2/DSP58
+        emulation) words.
+      plan: SDV lane plan on any exact-wrap datapath.
 
     Returns:
       [R, G, n] int32 — exact per-lane dot products (dequantize
@@ -146,8 +168,10 @@ def sdv_matmul(x_q: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
     _, g = w_words.shape
     n, lane = plan.n, plan.lane
     sign_shift = plan.packed_width
-    if plan.signed_a:
-        assert sign_shift + n <= 32, "no room to park sign bits"
+    ws = bseg_common.sdv_word_spec(plan)
+    assert ws.exact_wrap, plan.spec.name     # spill tracking needs wrap
+    assert bseg_common.sdv_layout_bits(plan) <= plan.spec.w_word, plan
+    assert w_words.dtype == ws.dtype, (w_words.dtype, ws.dtype)
     br = min(br, r)
     bg = min(bg, g)
     bk = min(bk, k)
@@ -156,7 +180,7 @@ def sdv_matmul(x_q: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
     grid = (pl.cdiv(r, br), pl.cdiv(g, bg), k // bk)
     return pl.pallas_call(
         functools.partial(_body, n, lane, plan.w_a, plan.signed_a, signed,
-                          sign_shift, k // bk, bk, 1),
+                          sign_shift, k // bk, bk, 1, ws.dtype_name),
         grid=grid,
         in_specs=[
             pl.BlockSpec((br, bk), lambda ir, ig, ik: (ir, ik)),
@@ -165,7 +189,7 @@ def sdv_matmul(x_q: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
         out_specs=pl.BlockSpec((br, bg, n), lambda ir, ig, ik: (ir, ig, 0)),
         out_shape=jax.ShapeDtypeStruct((r, g, n), jnp.int32),
         scratch_shapes=[
-            pltpu.VMEM((br, bg), jnp.int32),
+            pltpu.VMEM((br, bg), ws.dtype),
             pltpu.VMEM((br, bg, n), jnp.int32),
         ],
         interpret=interpret,

@@ -22,7 +22,9 @@ so the per-step slice is a sublane read.
 The kernel body (pre-adder, spill tracker, extractor) is shared with
 the batched GEMM kernel — ``kernels/sdv_matmul._body`` with the
 K-major activation layout (``x_k_axis=0``); this wrapper is the
-decode-micro-batch special case.
+decode-micro-batch special case.  Like the GEMM kernel the body is
+word-generic (``bseg_common.sdv_word_spec``): int32 words, or int64
+for the DSP48E2/DSP58 emulation words (x64 + interpret only).
 """
 from __future__ import annotations
 
@@ -34,6 +36,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.datapath import SDVPlan
+from . import bseg_common
 from .sdv_matmul import _body
 
 
@@ -46,8 +49,9 @@ def sdv_matvec(x_t: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
 
     Args:
       x_t: [K, B] int8 activations (K-major), values within w_b bits.
-      w_words: [K, G] int32 storage words (from ``prepare_sdv_weights``).
-      plan: SDV lane plan on the INT32 datapath.
+      w_words: [K, G] storage words (from ``prepare_sdv_weights``) in
+        the plan's word dtype.
+      plan: SDV lane plan on any exact-wrap datapath.
 
     Returns:
       [B, G, n] int32 — exact per-lane dot products (dequantize outside).
@@ -56,7 +60,10 @@ def sdv_matvec(x_t: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
     _, g = w_words.shape
     n, lane = plan.n, plan.lane
     sign_shift = plan.packed_width
-    assert sign_shift + n <= 32, "no room to park sign bits"
+    ws = bseg_common.sdv_word_spec(plan)
+    assert ws.exact_wrap, plan.spec.name     # spill tracking needs wrap
+    assert bseg_common.sdv_layout_bits(plan) <= plan.spec.w_word, plan
+    assert w_words.dtype == ws.dtype, (w_words.dtype, ws.dtype)
     bb = min(bb, b)
     bg = min(bg, g)
     bk = min(bk, k)
@@ -65,7 +72,7 @@ def sdv_matvec(x_t: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
     grid = (pl.cdiv(b, bb), pl.cdiv(g, bg), k // bk)
     return pl.pallas_call(
         functools.partial(_body, n, lane, plan.w_a, plan.signed_a, signed,
-                          sign_shift, k // bk, bk, 0),
+                          sign_shift, k // bk, bk, 0, ws.dtype_name),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bk, bb), lambda ib, ig, ik: (ik, ib)),
@@ -74,7 +81,7 @@ def sdv_matvec(x_t: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
         out_specs=pl.BlockSpec((bb, bg, n), lambda ib, ig, ik: (ib, ig, 0)),
         out_shape=jax.ShapeDtypeStruct((b, g, n), jnp.int32),
         scratch_shapes=[
-            pltpu.VMEM((bb, bg), jnp.int32),
+            pltpu.VMEM((bb, bg), ws.dtype),
             pltpu.VMEM((bb, bg, n), jnp.int32),
         ],
         interpret=interpret,

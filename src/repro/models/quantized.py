@@ -8,13 +8,14 @@ transparently dispatches on the container type, so ``decode_step``/
     kernel becomes a ``PackedLinear`` — w-bit symmetric per-output-
     channel quantization, 32/w values per int32 lane word in HBM; the
     paper's packing applied to the TPU memory roofline.
-  * ``compute="sdv"`` (``packed_compute_sdv``): 2-D projection kernels
-    become ``SDVLinear`` — the same quantization stored as SDV words
-    ([K, G] int32, n output channels lane-packed per word), executed
-    through the ``kernels/ops.packed_matmul`` dispatch layer so batched
+  * ``compute="sdv"`` (``packed_compute_sdv``): projection kernels —
+    2-D leaves and scanned layer stacks of them — become ``SDVLinear``:
+    the same quantization stored as SDV words ([K, G], n output
+    channels lane-packed per word), executed through the
+    ``kernels/ops.packed_matmul`` dispatch layer so batched
     decode/prefill GEMMs run on the packed arithmetic datapath
     (activations are dynamically quantized per row to ``plan.w_b``
-    bits).  Kernels with more than 2 dims (MoE expert banks) keep the
+    bits).  Unstacked >2-D kernels (MoE expert banks) keep the
     memory packing.  The short depthwise conv of the SSM/Griffin blocks
     becomes ``BSEGConv`` — taps BSEG-packed through the pre-adder,
     executed via the ``kernels/ops`` packed-conv dispatch (activations
@@ -51,8 +52,12 @@ jax.tree_util.register_dataclass(PackedLinear, data_fields=["words", "scale"],
 @dataclasses.dataclass
 class SDVLinear:
     """Arithmetic-packed quantized kernel: SDV storage words
-    [d_in, G] int32 (G = ceil(d_out/plan.n) lane groups), scale
-    [d_out] f32; executed via ``kernels/ops.packed_matmul``."""
+    [d_in, G] (G = ceil(d_out/plan.n) lane groups, dtype per the
+    plan's word spec), scale [d_out] f32; executed via
+    ``kernels/ops.packed_matmul``.  A scanned layer stack keeps a
+    leading layer axis on ``words``/``scale`` ([L, d_in, G] /
+    [L, d_out]); ``lax.scan`` slices it back off, yielding the
+    per-layer container unchanged (same pattern as ``BSEGConv``)."""
     words: jnp.ndarray
     scale: jnp.ndarray
     plan: SDVPlan
@@ -96,9 +101,17 @@ def default_sdv_plan(bits: int, act_bits: int = 8) -> SDVPlan:
 
 def pack_linear_sdv(kernel: jnp.ndarray, plan: SDVPlan) -> SDVLinear:
     """kernel [d_in, d_out] float -> SDVLinear (w_a-bit symmetric
-    per-output-channel quantization stored as SDV words)."""
+    per-output-channel quantization stored as SDV words).  A stacked
+    [L, d_in, d_out] kernel (scanned blocks) packs each layer with the
+    shared plan and keeps the layer axis on every data field."""
     from repro.kernels import ops
-    assert kernel.ndim == 2, kernel.shape
+    assert kernel.ndim in (2, 3), kernel.shape
+    if kernel.ndim == 3:
+        per = [pack_linear_sdv(kernel[i], plan)
+               for i in range(kernel.shape[0])]
+        return SDVLinear(words=jnp.stack([p.words for p in per]),
+                         scale=jnp.stack([p.scale for p in per]),
+                         plan=plan, d_out=kernel.shape[-1])
     qmax = (1 << (plan.w_a - 1)) - 1
     kf = kernel.astype(jnp.float32)
     amax = jnp.max(jnp.abs(kf), axis=0)
@@ -227,6 +240,12 @@ def materialize(pl, dtype=jnp.bfloat16) -> jnp.ndarray:
     """Unpack + dequantize -> [..., d_in, d_out] in ``dtype``."""
     if isinstance(pl, SDVLinear):
         from repro.kernels import ref
+        if pl.words.ndim == 3:           # scanned layer stack
+            return jnp.stack([
+                materialize(SDVLinear(words=pl.words[i],
+                                      scale=pl.scale[i], plan=pl.plan,
+                                      d_out=pl.d_out), dtype)
+                for i in range(pl.words.shape[0])])
         w_int = ref.sdv_unpack_words_ref(pl.words, plan=pl.plan)
         return (w_int[:, :pl.d_out].astype(jnp.float32)
                 * pl.scale[None, :]).astype(dtype)
@@ -253,6 +272,18 @@ def is_sdv(x) -> bool:
 
 _QUANT_LEAF_NAMES = ("kernel", "wi_gate", "wi_up", "wo")
 _SKIP_CONTAINERS = ("router", "conv", "proj_patches")
+#: top-level containers whose leading axis is the ``lax.scan`` layer
+#: axis — a 3-D kernel under one of these is a *stack of 2-D GEMMs*
+#: (scan slices the axis back off), so it is SDV-packable per layer;
+#: a 3-D kernel anywhere else (an unstacked MoE expert bank) is a
+#: genuinely 3-D einsum operand and keeps memory packing.
+_STACKED_CONTAINERS = ("blocks", "groups", "tail", "enc_blocks",
+                       "dec_blocks")
+
+
+def _stacked_leading_axis(path: str) -> bool:
+    head = path.split("/", 1)[0]
+    return head in _STACKED_CONTAINERS or head.startswith("blocks_dense")
 
 
 #: decode micro-batch rows the planner dimensions matmul layers for
@@ -264,16 +295,20 @@ def serve_params(params: Any, bits: int = 4,
                  act_bits: int = 8,
                  conv_bseg: Optional[bool] = None,
                  plan_policy: str = "default",
-                 plan_cache: Optional[str] = None) -> Any:
+                 plan_cache: Optional[str] = None,
+                 rows: Optional[int] = None) -> Any:
     """Rewrite a parameter *value* tree for quantized packed serving.
 
     ``compute="memory"`` packs every eligible kernel as ``PackedLinear``
-    (HBM lane words); ``compute="sdv"`` packs 2-D kernels as
-    ``SDVLinear`` (arithmetic packing — the GEMMs execute on the SDV
-    datapath via ``packed_matmul``), keeping memory packing for >2-D
-    expert banks, and — unless ``conv_bseg=False`` — the SSM/Griffin
-    short-conv containers as ``BSEGConv`` (the convs execute on the
-    BSEG datapath via the packed-conv dispatch).
+    (HBM lane words); ``compute="sdv"`` packs 2-D kernels *and* scanned
+    layer stacks of 2-D kernels (a 3-D leaf under a ``lax.scan``
+    container — ``blocks``, ``groups``, ... — packs per layer with a
+    shared plan) as ``SDVLinear`` (arithmetic packing — the GEMMs
+    execute on the SDV datapath via ``packed_matmul``), keeping memory
+    packing for unstacked >2-D expert banks, and — unless
+    ``conv_bseg=False`` — the SSM/Griffin short-conv containers as
+    ``BSEGConv`` (the convs execute on the BSEG datapath via the
+    packed-conv dispatch).
 
     ``plan_policy`` selects the lane plans under ``compute="sdv"``:
     ``"default"`` keeps the uniform ``default_sdv_plan`` /
@@ -284,9 +319,16 @@ def serve_params(params: Any, bits: int = 4,
     Any layer whose chosen plan would still land on the pure-jnp ref
     route is surfaced once per shape via ``warnings.warn`` instead of
     silently degrading.
+
+    ``rows`` is the decode micro-batch row count the planner
+    dimensions matmul layers for (default ``PLANNER_DECODE_ROWS``) —
+    the serving engine passes each bucket's batch size so per-bucket
+    plan resolution sees the shape it will actually run.
     """
     if compute not in ("memory", "sdv"):
         raise ValueError(f"unknown packed compute mode {compute!r}")
+    if rows is None:
+        rows = PLANNER_DECODE_ROWS
     if plan_policy not in ("default", "auto", "cache"):
         raise ValueError(f"unknown plan policy {plan_policy!r}")
     sdv_mode = compute == "sdv"
@@ -335,11 +377,11 @@ def serve_params(params: Any, bits: int = 4,
         return choice.plan
 
     def layer_plan(name, v):
-        """The SDV plan for one 2-D kernel leaf."""
+        """The SDV plan for one (possibly stacked) 2-D kernel leaf."""
         if planner_ctx is None:
             return plan
         layer = planner_ctx["mod"].matmul_spec(
-            name, PLANNER_DECODE_ROWS, v.shape[0], v.shape[1],
+            name, rows, v.shape[-2], v.shape[-1],
             w_bits=bits, a_bits=act_bits)
         return _choose(layer)
 
@@ -349,12 +391,13 @@ def serve_params(params: Any, bits: int = 4,
             return conv_plan
         layer = planner_ctx["mod"].conv1d_spec(
             name, w.shape[-2], w.shape[-1], w_bits=min(bits, 4),
-            a_bits=4, rows=PLANNER_DECODE_ROWS)
+            a_bits=4, rows=rows)
         chosen = _choose(layer)
         return chosen if isinstance(chosen, BSEGPlan) else conv_plan
 
     def quantize(v, name="kernel"):
-        if sdv_mode and v.ndim == 2:
+        if sdv_mode and (v.ndim == 2 or
+                         (v.ndim == 3 and _stacked_leading_axis(name))):
             return pack_linear_sdv(v, layer_plan(name, v))
         return pack_linear(v, bits)
 

@@ -7,15 +7,18 @@ The score is an *effective wide-multiply count* — the paper's currency
      on (``select_packed_route`` / ``select_conv_route`` with
      ``explain=True``): ``sdv_num_multiplies`` for the SDV GEMM/GEMV,
      ``bseg_conv2d_num_multiplies`` / ``bseg_num_multiplies`` for the
-     conv kernels.  The BSEG conv kernels are datapath-generic
-     (int32 / fp32 / int64 word representations), so fp32m and
-     dsp48e2/dsp58 conv plans are priced as *kernel* routes in the
-     paper's wide-multiply currency — one word, ``n_k * n_i`` MACs —
-     not as ref fallbacks.  A ref fallback (SDV on a non-int32 word,
-     int8-staging overflow, even taps, x64 off, no Pallas backend) is
-     charged the *naive* MAC count times ``REF_ROUTE_FACTOR`` — the
-     plan never reaches the packed datapath, so its density is 1 and
-     XLA's fusion does not make the multiplies any wider;
+     conv kernels.  Both kernel families are datapath-generic: the
+     BSEG conv kernels run int32 / fp32 / int64 word representations
+     and the SDV GEMM/GEMV kernels run int32 words plus the int64
+     DSP48E2/DSP58 emulation words — so wide-word matmul *and* conv
+     plans are priced as *kernel* routes in the paper's wide-multiply
+     currency (one word, ``n`` / ``n_k * n_i`` MACs), not as ref
+     fallbacks.  A remaining ref fallback (fp32m SDV — rounding breaks
+     spill tracking, int8-staging overflow, even taps, x64 off, no
+     Pallas backend) is charged the *naive* MAC count times
+     ``REF_ROUTE_FACTOR`` — the plan never reaches the packed
+     datapath, so its density is 1 and XLA's fusion does not make the
+     multiplies any wider;
   2. spill-correction overhead on SDV routes: every wide multiply
      carries ``n`` mod-4 observe/compare/accumulate fix-ups (the
      fractured-LUT tracker, ``finnlite.resource`` charges the same

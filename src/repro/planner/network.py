@@ -132,7 +132,8 @@ def arch_layer_specs(arch: str, *, bits: int = 4, act_bits: int = 8,
     from repro.configs.registry import get_arch
     from repro.models import Rules, init_params, values
     from repro.models.quantized import (_QUANT_LEAF_NAMES,
-                                        _SKIP_CONTAINERS)
+                                        _SKIP_CONTAINERS,
+                                        _stacked_leading_axis)
 
     cfg = get_arch(arch)
     if smoke:
@@ -159,9 +160,15 @@ def arch_layer_specs(arch: str, *, bits: int = 4, act_bits: int = 8,
                 continue
             elif isinstance(v, dict):
                 walk(v, name)
-            elif k in _QUANT_LEAF_NAMES and getattr(v, "ndim", 0) == 2 \
+            elif k in _QUANT_LEAF_NAMES and (
+                    getattr(v, "ndim", 0) == 2
+                    or (getattr(v, "ndim", 0) == 3
+                        and _stacked_leading_axis(name))) \
                     and math.prod(v.shape) >= min_size:
-                d_in, d_out = v.shape
+                # a scanned layer stack is a stack of identical 2-D
+                # GEMMs — one spec covers every slice (serve_params
+                # packs it per layer with the shared plan)
+                d_in, d_out = v.shape[-2], v.shape[-1]
                 specs.append(matmul_spec(name, rows, d_in, d_out,
                                          w_bits=bits, a_bits=act_bits))
     walk(shapes, "")

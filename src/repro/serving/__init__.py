@@ -1,0 +1,36 @@
+"""Online serving engine (DESIGN.md §5).
+
+The subsystem that connects "requests arrive" to "planner-chosen
+packed kernels execute at high occupancy":
+
+  * ``queue``   — ``Request`` admission + the continuous batcher that
+    coalesces traffic into planner-bucketed batch shapes (pad-to-
+    bucket; budget- and deadline-aware flush; hard-budget
+    backpressure; injectable clock);
+  * ``engine``  — per-(arch, bucket) warmup/compile + plan resolution
+    through ``repro.planner`` (``plan_policy`` defaults to ``cache``
+    when a plan-cache file exists, else ``auto``), the decode session
+    table with KV-cache slot reuse, and wave execution;
+  * ``metrics`` — p50/p99 latency, tokens/s, queue depth, and
+    packed-multiply utilization (achieved MACs/wide-multiply via the
+    existing density accounting), exported as a JSON snapshot;
+  * ``loadgen`` — Poisson / closed-loop drivers and the
+    ``BENCH_5.json`` sweep (``python -m repro.serving.loadgen``).
+
+``launch/serve.py`` is the thin CLI over this package.
+"""
+from .queue import (Backpressure, BucketShape, ContinuousBatcher, Request,
+                    bucket_for, default_buckets)
+from .engine import (Completion, Engine, Session, SessionTable,
+                     default_plan_policy)
+from .metrics import (EngineMetrics, latency_summary, packed_layer_stats,
+                      packed_utilization)
+
+__all__ = [
+    "Backpressure", "BucketShape", "ContinuousBatcher", "Request",
+    "bucket_for", "default_buckets",
+    "Completion", "Engine", "Session", "SessionTable",
+    "default_plan_policy",
+    "EngineMetrics", "latency_summary", "packed_layer_stats",
+    "packed_utilization",
+]

@@ -1,0 +1,353 @@
+"""Online inference engine: planner-bucketed packed decode.
+
+The engine owns the path from "a request arrived" to "planner-chosen
+packed kernels execute at high occupancy":
+
+  * a ``ContinuousBatcher`` (``queue.py``) coalesces heterogeneous
+    traffic into the engine's bucket shapes;
+  * per (arch, bucket) the engine resolves lane plans through the
+    mixed-precision planner — ``serve_params(plan_policy=...,
+    rows=bucket.batch)`` so every bucket is planned for the batch
+    shape it actually runs — memoized per batch width, compiles the
+    decode step once per bucket shape (``warmup``), and keeps the
+    bucket's KV cache + decode session table alive across waves;
+  * a ``SessionTable`` maps requests to KV-cache slots: joining
+    requests take the lowest free slot at a wave boundary, finished
+    requests free their slot mid-wave (the wave ends early once every
+    session left).  Mid-wave *joins* are structurally impossible with
+    the repo's shared-position cache (one scalar ``index`` per cache
+    pytree — a joiner's prompt would land at a nonzero position and
+    break bit-exactness), so admission happens at wave boundaries
+    only; per-slot position tracking is the next scaling PR
+    (DESIGN.md §5).
+  * backpressure: past the queue's hard budget ``submit`` raises
+    ``Backpressure`` (recorded in metrics) instead of queueing
+    unbounded work.
+
+Plan-policy default (ROADMAP calibration item): when a plan-cache
+file is present the engine defaults to ``plan_policy="cache"`` — the
+autotuned wall-clock tie-breaking is exercised on the serving path —
+falling back to ``"auto"`` when there is no cache to consult
+(``default_plan_policy``).
+
+Latency accounting syncs with ``jax.block_until_ready`` inside the
+timed loop (the understated-latency bug class fixed in
+``kernelbench._t``): a completion's latency includes queue wait, all
+decode steps, and device sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .queue import (Backpressure, BucketShape, ContinuousBatcher, Request,
+                    default_buckets)
+from .metrics import EngineMetrics, packed_utilization
+
+PLAN_POLICIES = ("default", "auto", "cache")
+
+
+def default_plan_policy(plan_cache: Optional[str] = None) -> str:
+    """The engine's plan-policy default: ``"cache"`` when a plan-cache
+    file exists (at ``plan_cache``, ``$REPRO_PLAN_CACHE`` or the
+    default path), so autotuned timings steer serving; ``"auto"``
+    otherwise — a cold start should not fail on a missing file."""
+    from repro.planner import default_cache_path
+    path = plan_cache or default_cache_path()
+    return "cache" if os.path.exists(path) else "auto"
+
+
+@dataclasses.dataclass
+class Session:
+    """One request occupying a KV-cache slot."""
+    request: Request
+    start_t: float
+    slot: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.request.prompt)
+
+    def done(self) -> bool:
+        return len(self.tokens) >= self.request.new_tokens
+
+
+class SessionTable:
+    """Slot allocator for one bucket's KV cache.
+
+    Slots are reused across waves: ``join`` takes the lowest free
+    slot, ``leave`` frees it the moment a request finishes (mid-wave),
+    and the cache arrays themselves persist per bucket — no
+    re-allocation between waves.
+    """
+
+    def __init__(self, batch: int):
+        self._slots: List[Optional[Session]] = [None] * batch
+
+    def join(self, session: Session) -> int:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                session.slot = i
+                self._slots[i] = session
+                return i
+        raise RuntimeError("no free KV slot")
+
+    def leave(self, slot: int) -> Session:
+        s = self._slots[slot]
+        assert s is not None, slot
+        self._slots[slot] = None
+        return s
+
+    def active(self) -> List[Tuple[int, Session]]:
+        return [(i, s) for i, s in enumerate(self._slots) if s is not None]
+
+    def free_slots(self) -> int:
+        return sum(1 for s in self._slots if s is None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    rid: int
+    tokens: Tuple[int, ...]
+    prompt_len: int
+    bucket_key: str
+    submit_t: float
+    start_t: float
+    finish_t: float
+    deadline: Optional[float] = None
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_t - self.submit_t
+
+    @property
+    def met_deadline(self) -> bool:
+        return self.deadline is None or self.finish_t <= self.deadline
+
+
+@dataclasses.dataclass
+class _BucketState:
+    bucket: BucketShape
+    qparams: Any
+    cache0: Any                     # pristine cache pytree, reused
+    sessions: SessionTable
+    warmed: bool = False
+    step_s: float = 0.0             # EMA of one decode step's wall clock
+
+
+class Engine:
+    """The execution core.  Synchronous: ``step()`` pulls one ready
+    batch from the batcher and runs it to completion as a *wave*."""
+
+    def __init__(self, cfg, params, *, compute: str = "sdv",
+                 weight_bits: int = 4, act_bits: int = 8,
+                 conv_datapath: str = "bseg",
+                 plan_policy: Optional[str] = None,
+                 plan_cache: Optional[str] = None,
+                 buckets: Optional[Sequence[BucketShape]] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 queue_budget: int = 64,
+                 flush_budget: Optional[int] = None,
+                 min_size: int = 1024, pad_token: int = 0):
+        import jax
+
+        from repro.models import decode_step
+
+        self.cfg = cfg
+        self.params = params
+        self.compute = compute
+        self.weight_bits = weight_bits
+        self.act_bits = act_bits
+        self.conv_datapath = conv_datapath
+        self.min_size = min_size
+        self.pad_token = pad_token
+        self.clock = clock
+        self.plan_cache = plan_cache
+        if compute != "sdv":
+            # memory packing has no lane plans to choose
+            self.plan_policy = "default"
+        elif plan_policy is None:
+            self.plan_policy = default_plan_policy(plan_cache)
+        else:
+            if plan_policy not in PLAN_POLICIES:
+                raise ValueError(f"unknown plan policy {plan_policy!r}")
+            self.plan_policy = plan_policy
+        self.buckets = tuple(buckets) if buckets else default_buckets()
+        self.batcher = ContinuousBatcher(
+            self.buckets, clock=clock, queue_budget=queue_budget,
+            flush_budget=flush_budget)
+        self.metrics = EngineMetrics(clock=clock)
+        self.completions: List[Completion] = []
+        self._states: Dict[str, _BucketState] = {}
+        self._qparams_by_rows: Dict[int, Any] = {}
+        self._dec = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+
+    # -- plan resolution / warmup -----------------------------------------
+
+    def _qparams(self, rows: int) -> Any:
+        """Packed parameters planned for a ``rows``-row decode batch
+        (memoized — buckets sharing a batch width share the tree)."""
+        from repro.models import serve_params
+        if rows not in self._qparams_by_rows:
+            self._qparams_by_rows[rows] = serve_params(
+                self.params, bits=self.weight_bits, min_size=self.min_size,
+                compute=self.compute, act_bits=self.act_bits,
+                conv_bseg=(self.compute == "sdv"
+                           and self.conv_datapath == "bseg"),
+                plan_policy=self.plan_policy, plan_cache=self.plan_cache,
+                rows=rows)
+        return self._qparams_by_rows[rows]
+
+    def _state(self, bucket: BucketShape) -> _BucketState:
+        from repro.models import init_cache, values, Rules
+        st = self._states.get(bucket.key)
+        if st is None:
+            rules = Rules(tp=None, fsdp=None, ep=None, batch=())
+            st = _BucketState(
+                bucket=bucket,
+                qparams=self._qparams(bucket.batch),
+                cache0=values(init_cache(self.cfg, rules, bucket.batch,
+                                         bucket.s_max)),
+                sessions=SessionTable(bucket.batch))
+            self._states[bucket.key] = st
+        return st
+
+    def warmup(self, bucket: BucketShape) -> _BucketState:
+        """Compile the bucket's decode step and record its packed-
+        multiply utilization; idempotent."""
+        import jax
+        import jax.numpy as jnp
+        st = self._state(bucket)
+        if st.warmed:
+            return st
+        toks = jnp.full((bucket.batch, 1), self.pad_token, jnp.int32)
+        logits, _ = self._dec(st.qparams, st.cache0, toks)   # compile
+        jax.block_until_ready(logits)
+        t0 = self.clock()
+        logits, _ = self._dec(st.qparams, st.cache0, toks)   # measure
+        jax.block_until_ready(logits)
+        st.step_s = max(self.clock() - t0, 1e-9)
+        st.warmed = True
+        util = packed_utilization(st.qparams, bucket.batch)
+        self.metrics.set_bucket_utilization(
+            bucket.key, {k: v for k, v in util.items() if k != "layers"})
+        return st
+
+    def plan_report(self) -> Dict[str, Any]:
+        """Per-bucket plan resolution: utilization + per-layer routes
+        (use_kernel=True — the datapath routes the plans land on)."""
+        return {key: packed_utilization(st.qparams, st.bucket.batch)
+                for key, st in sorted(self._states.items())}
+
+    def _est_wave_s(self) -> float:
+        warmed = [st for st in self._states.values() if st.warmed]
+        if not warmed:
+            return 0.0
+        return max(st.step_s * (st.bucket.s_max - 1) for st in warmed)
+
+    # -- request admission -------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], new_tokens: int,
+               deadline: Optional[float] = None,
+               submit_t: Optional[float] = None) -> int:
+        """Enqueue a request; returns its rid.  Raises ``Backpressure``
+        at the hard queue budget (recorded), ``ValueError`` when no
+        bucket shape can ever run it.  ``submit_t`` back-dates the
+        latency clock to the request's true arrival time (load
+        generators submitting after a wave held the loop)."""
+        req = Request(prompt=tuple(prompt), new_tokens=new_tokens,
+                      deadline=deadline, submit_t=submit_t)
+        try:
+            self.batcher.submit(req)
+        except Backpressure:
+            self.metrics.record_rejection()
+            raise
+        return req.rid
+
+    def depth(self) -> int:
+        return self.batcher.depth()
+
+    # -- execution ---------------------------------------------------------
+
+    def step(self, force: bool = False) -> List[Completion]:
+        """Run at most one wave: pull a ready batch (``force=True``
+        flushes a partial bucket — the drain path) and decode it to
+        completion.  Returns the wave's completions (empty when no
+        flush rule fired)."""
+        self.metrics.sample_depth(self.batcher.depth())
+        got = self.batcher.ready(est_wave_s=self._est_wave_s(),
+                                 force=force)
+        if got is None:
+            return []
+        bucket, requests = got
+        return self._run_wave(bucket, requests)
+
+    def drain(self) -> List[Completion]:
+        out: List[Completion] = []
+        while self.batcher.depth():
+            out.extend(self.step(force=True))
+        return out
+
+    def _run_wave(self, bucket: BucketShape,
+                  requests: List[Request]) -> List[Completion]:
+        import jax
+        import jax.numpy as jnp
+        st = self.warmup(bucket)
+        self.metrics.record_start()
+        table = st.sessions
+        start_t = self.clock()
+        for r in requests:                      # join at the wave boundary
+            table.join(Session(request=r, start_t=start_t))
+
+        b, vocab = bucket.batch, self.cfg.vocab
+        toks = np.full((b, 1), self.pad_token, np.int32)
+        for slot, s in table.active():
+            toks[slot, 0] = s.request.prompt[0]
+        cache = st.cache0                       # reused across waves
+        max_steps = max(s.prompt_len - 1 + s.request.new_tokens
+                        for _, s in table.active())
+        completions: List[Completion] = []
+        steps = 0
+        t0 = self.clock()
+        for i in range(max_steps):
+            logits, cache = self._dec(st.qparams, cache,
+                                      jnp.asarray(toks))
+            # sync INSIDE the timed loop: per-step wall clock and
+            # completion latencies must include device time
+            jax.block_until_ready(logits)
+            steps += 1
+            last = np.asarray(logits[:, -1, :vocab])
+            nxt = np.full((b, 1), self.pad_token, np.int32)
+            finish_t = self.clock()
+            for slot, s in table.active():
+                if i + 1 < s.prompt_len:        # teacher-force the prompt
+                    nxt[slot, 0] = s.request.prompt[i + 1]
+                    continue
+                tok = int(last[slot].argmax())
+                s.tokens.append(tok)
+                nxt[slot, 0] = tok
+                if s.done():                    # leave mid-wave: free slot
+                    table.leave(slot)
+                    comp = Completion(
+                        rid=s.request.rid, tokens=tuple(s.tokens),
+                        prompt_len=s.prompt_len, bucket_key=bucket.key,
+                        submit_t=s.request.submit_t, start_t=s.start_t,
+                        finish_t=finish_t, deadline=s.request.deadline)
+                    completions.append(comp)
+                    self.metrics.record_completion(
+                        submit_t=comp.submit_t, start_t=comp.start_t,
+                        finish_t=comp.finish_t, n_tokens=len(comp.tokens))
+            if not table.active():              # everyone left: end early
+                break
+            toks = nxt
+        wall = max(self.clock() - t0, 1e-9)
+        st.step_s = 0.5 * st.step_s + 0.5 * (wall / steps)   # EMA
+        self.metrics.record_wave(bucket.key, steps=steps, wall_s=wall,
+                                 requests=len(requests))
+        self.completions.extend(completions)
+        return completions

@@ -1,0 +1,275 @@
+"""Load generator for the serving engine: Poisson open-loop and
+closed-loop drivers, and the ``BENCH_5.json`` writer.
+
+Open loop (``--mode poisson``): request arrivals are a seeded Poisson
+process at ``--rates`` requests/s for ``--duration`` seconds; prompt
+lengths and decode budgets vary per request (seeded), so the batcher
+sees genuinely heterogeneous traffic.  Arrivals that hit backpressure
+are counted and dropped (an open-loop client does not retry).  Closed
+loop (``--mode closed``): ``--users`` concurrent clients, each
+submitting its next request the moment the previous one completes —
+the throughput-saturation view.
+
+``main`` sweeps arrival rate x compute mode (packed ``sdv`` vs
+``memory``) and writes one JSON payload with a latency/throughput
+curve point per (compute, rate) plus the sdv engine's per-bucket plan
+resolution — the CI smoke validates the schema and that at least one
+bucket resolved onto a packed kernel route.
+
+  PYTHONPATH=src python -m repro.serving.loadgen --arch tinyllama-1.1b \
+      --smoke --rates 30,90 --duration 1.0 --json BENCH_5.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .engine import Backpressure, Engine, PLAN_POLICIES
+from .queue import BucketShape
+
+
+def poisson_arrivals(rate_per_s: float, duration_s: float,
+                     rng: np.random.Generator) -> List[float]:
+    t, out = 0.0, []
+    while True:
+        t += float(rng.exponential(1.0 / rate_per_s))
+        if t >= duration_s:
+            return out
+        out.append(t)
+
+
+def _request_specs(n: int, vocab: int, prompt_len: int, new_tokens: int,
+                   rng: np.random.Generator):
+    """Heterogeneous request stream: prompt lengths in
+    [prompt_len/2, prompt_len], decode budgets in
+    [new_tokens/2, new_tokens] (seeded, so runs are reproducible)."""
+    specs = []
+    for _ in range(n):
+        pl = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        nt = int(rng.integers(max(1, new_tokens // 2), new_tokens + 1))
+        specs.append((tuple(int(t) for t in rng.integers(0, vocab, pl)),
+                      nt))
+    return specs
+
+
+def run_poisson(engine: Engine, *, rate: float, duration_s: float,
+                prompt_len: int, new_tokens: int,
+                rng: np.random.Generator,
+                slo_s: Optional[float] = None,
+                sleep=time.sleep) -> Dict[str, Any]:
+    """Drive one engine with a Poisson arrival process; returns the
+    metrics snapshot after the queue fully drains."""
+    vocab = engine.cfg.vocab
+    arrivals = poisson_arrivals(rate, duration_s, rng)
+    specs = _request_specs(len(arrivals), vocab, prompt_len, new_tokens,
+                           rng)
+    t0 = engine.clock()
+    i = 0
+    unfittable = 0
+    while i < len(arrivals) or engine.depth():
+        now = engine.clock() - t0
+        while i < len(arrivals) and arrivals[i] <= now:
+            prompt, nt = specs[i]
+            # latency and deadline run from the *scheduled arrival*,
+            # not from whenever a wave let this loop submit — else a
+            # busy engine hides its own queueing delay (coordinated
+            # omission)
+            arrived = t0 + arrivals[i]
+            try:
+                engine.submit(prompt, nt, submit_t=arrived,
+                              deadline=(arrived + slo_s) if slo_s
+                              else None)
+            except Backpressure:
+                pass                    # open loop: counted + dropped
+            except ValueError:          # no bucket fits: shed, note it
+                unfittable += 1
+            i += 1
+        if engine.step():
+            continue
+        if i < len(arrivals):           # idle until the next arrival
+            wait = arrivals[i] - (engine.clock() - t0)
+            if wait > 0:
+                sleep(min(wait, 5e-3))
+        elif engine.depth():
+            engine.step(force=True)     # tail drain: partial buckets
+    snap = engine.metrics.snapshot()
+    snap["offered_requests"] = len(arrivals)
+    snap["offered_rate_per_s"] = rate
+    snap["unfittable_requests"] = unfittable
+    return snap
+
+
+def run_closed_loop(engine: Engine, *, users: int, rounds: int,
+                    prompt_len: int, new_tokens: int,
+                    rng: np.random.Generator) -> Dict[str, Any]:
+    """Closed loop: every round, each user submits one request as soon
+    as the previous round completed; the engine drains between rounds
+    (a synchronous engine's equivalent of think-time-zero clients)."""
+    vocab = engine.cfg.vocab
+    total = 0
+    unfittable = 0
+    for _ in range(rounds):
+        for prompt, nt in _request_specs(users, vocab, prompt_len,
+                                         new_tokens, rng):
+            total += 1
+            try:
+                engine.submit(prompt, nt)
+            except Backpressure:
+                pass
+            except ValueError:
+                unfittable += 1
+        engine.drain()
+    snap = engine.metrics.snapshot()
+    snap["offered_requests"] = total
+    snap["closed_loop_users"] = users
+    snap["unfittable_requests"] = unfittable
+    return snap
+
+
+# ---------------------------------------------------------------------------
+# the BENCH_5 sweep
+# ---------------------------------------------------------------------------
+
+def bench_serving(arch: str, *, smoke: bool, rates: Sequence[float],
+                  duration_s: float, computes: Sequence[str],
+                  prompt_len: int, new_tokens: int, batch: int,
+                  s_maxes: Sequence[int], weight_bits: int, act_bits: int,
+                  plan_policy: Optional[str], plan_cache: Optional[str],
+                  slo_ms: Optional[float], seed: int,
+                  mode: str = "poisson", users: int = 8,
+                  rounds: int = 2) -> Dict[str, Any]:
+    import jax
+
+    from repro.configs.registry import get_arch
+    from repro.models import init_params, values, Rules
+
+    cfg = get_arch(arch)
+    if smoke:
+        cfg = cfg.reduced()
+    rules = Rules(tp=None, fsdp=None, ep=None, batch=())
+    params = values(init_params(cfg, rules, jax.random.PRNGKey(0)))
+    buckets = tuple(BucketShape(batch, s) for s in s_maxes)
+
+    curves: List[Dict[str, Any]] = []
+    bucket_plans: Dict[str, Any] = {}
+    resolved_policy = None
+    for compute in computes:
+        for ri, rate in enumerate(rates):
+            engine = Engine(cfg, params, compute=compute,
+                            weight_bits=weight_bits, act_bits=act_bits,
+                            plan_policy=plan_policy,
+                            plan_cache=plan_cache, buckets=buckets)
+            for b in buckets:      # steady-state curves: compile cost
+                engine.warmup(b)   # is not charged to early requests
+            rng = np.random.default_rng(seed + ri)   # same stream per
+            if mode == "closed":                     # compute mode
+                snap = run_closed_loop(engine, users=users, rounds=rounds,
+                                       prompt_len=prompt_len,
+                                       new_tokens=new_tokens, rng=rng)
+            else:
+                snap = run_poisson(engine, rate=rate,
+                                   duration_s=duration_s,
+                                   prompt_len=prompt_len,
+                                   new_tokens=new_tokens, rng=rng,
+                                   slo_s=(slo_ms / 1e3) if slo_ms
+                                   else None)
+            curves.append({"compute": compute, "rate_per_s": rate,
+                           **snap})
+            if compute == "sdv":
+                resolved_policy = engine.plan_policy
+                for key, util in engine.plan_report().items():
+                    bucket_plans.setdefault(key, util)
+
+    return {
+        "bench": "serving_engine",
+        "arch": cfg.name,
+        "smoke": smoke,
+        "mode": mode,
+        "backend": jax.default_backend(),
+        "buckets": [{"batch": b.batch, "s_max": b.s_max} for b in buckets],
+        "weight_bits": weight_bits,
+        "act_bits": act_bits,
+        "plan_policy": resolved_policy,
+        "computes": list(computes),
+        "rates_per_s": list(rates),
+        "duration_s": duration_s,
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "curves": curves,
+        "bucket_plans": bucket_plans,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced config (--no-smoke runs full size)")
+    ap.add_argument("--rates", default="30,90",
+                    help="comma-separated arrival rates (requests/s)")
+    ap.add_argument("--duration", type=float, default=1.0,
+                    help="seconds of offered load per rate point")
+    ap.add_argument("--computes", default="sdv,memory")
+    ap.add_argument("--mode", choices=("poisson", "closed"),
+                    default="poisson")
+    ap.add_argument("--users", type=int, default=8,
+                    help="closed-loop concurrent clients")
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="closed-loop rounds per client")
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="bucket batch width (KV slots per wave)")
+    ap.add_argument("--buckets", default="24,48",
+                    help="comma-separated bucket s_max ladder")
+    ap.add_argument("--weight-bits", type=int, default=4)
+    ap.add_argument("--act-bits", type=int, default=8)
+    ap.add_argument("--plan-policy", choices=PLAN_POLICIES, default=None,
+                    help="default: cache when a plan-cache file exists, "
+                         "else auto (the engine default)")
+    ap.add_argument("--plan-cache", default=None)
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request deadline (submit + slo)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="write the payload to this path")
+    args = ap.parse_args(argv)
+
+    payload = bench_serving(
+        args.arch, smoke=args.smoke,
+        rates=[float(r) for r in args.rates.split(",") if r],
+        duration_s=args.duration,
+        computes=[c for c in args.computes.split(",") if c],
+        prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+        batch=args.batch,
+        s_maxes=[int(s) for s in args.buckets.split(",") if s],
+        weight_bits=args.weight_bits, act_bits=args.act_bits,
+        plan_policy=args.plan_policy, plan_cache=args.plan_cache,
+        slo_ms=args.slo_ms, seed=args.seed, mode=args.mode,
+        users=args.users, rounds=args.rounds)
+
+    for c in payload["curves"]:
+        print(f"{c['compute']:>6} @ {c['rate_per_s']:6.1f} req/s: "
+              f"{c['requests_completed']} done, "
+              f"{c['requests_rejected']} shed, "
+              f"p50 {c['latency']['p50_ms']:.1f} ms, "
+              f"p99 {c['latency']['p99_ms']:.1f} ms, "
+              f"{c['tokens_per_s']:.1f} tok/s")
+    for key, util in payload["bucket_plans"].items():
+        print(f"bucket {key}: {util['kernel_routed_layers']}/"
+              f"{util['packed_layers']} packed layers on kernel routes, "
+              f"density {util['density_achieved']:.2f} MACs/multiply")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

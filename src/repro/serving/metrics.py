@@ -1,0 +1,214 @@
+"""Serving metrics: latency percentiles, throughput, queue depth, and
+packed-multiply utilization, exported as one JSON-able snapshot.
+
+Latency is measured per request from ``submit`` to the step its last
+token came off the device (the engine syncs with
+``jax.block_until_ready`` inside the timed loop, so the numbers cannot
+be understated by async dispatch — the bug class fixed in
+``kernelbench._t`` in PR 2).
+
+Packed-multiply utilization is the paper's operational-density
+currency applied to a serving bucket: achieved MACs per wide multiply
+for one decode step of the bucket's batch, computed from the packed
+parameter containers with the existing accounting
+(``sdv_num_multiplies`` / ``bseg_num_multiplies``) and the *actual*
+dispatch route each layer's plan lands on (a ref-routed layer counts
+density 1 — it never reaches the packed datapath; memory-packed
+layers likewise, their packing is HBM-only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+
+def percentile(sorted_vals: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) of pre-sorted values."""
+    if not sorted_vals:
+        return 0.0
+    idx = max(0, min(len(sorted_vals) - 1,
+                     int(round(q / 100.0 * (len(sorted_vals) - 1)))))
+    return sorted_vals[idx]
+
+
+def latency_summary(latencies_s: List[float]) -> Dict[str, float]:
+    vals = sorted(latencies_s)
+    n = len(vals)
+    return {
+        "count": n,
+        "p50_ms": percentile(vals, 50) * 1e3,
+        "p99_ms": percentile(vals, 99) * 1e3,
+        "max_ms": (vals[-1] * 1e3) if vals else 0.0,
+        "mean_ms": (sum(vals) / n * 1e3) if n else 0.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# packed-multiply utilization (density accounting over a param tree)
+# ---------------------------------------------------------------------------
+
+def packed_layer_stats(qparams: Any, rows: int,
+                       use_kernel: bool = True) -> List[Dict[str, Any]]:
+    """Per packed layer: (route, reason, MACs, wide multiplies) for one
+    decode step of ``rows`` batch rows.
+
+    Routes are resolved with ``use_kernel=True`` by default — the
+    *datapath* route the plan lands on (what a Pallas-capable backend
+    runs); the interpret-free CPU serving path lowers the same plans
+    through the jnp emulation, which is the documented serving
+    behavior, not a planning failure.
+    """
+    from repro.core.bseg import bseg_num_multiplies
+    from repro.kernels import ops
+    from repro.kernels.sdv_matmul import sdv_num_multiplies
+    from repro.models.quantized import BSEGConv, PackedLinear, SDVLinear
+    from repro.planner import describe_plan
+
+    stats: List[Dict[str, Any]] = []
+
+    def add(name, kind, datapath, plan_desc, route, reason, macs, wide):
+        stats.append({"layer": name, "kind": kind, "datapath": datapath,
+                      "plan": plan_desc, "route": route, "reason": reason,
+                      "macs": int(macs), "wide_multiplies": int(wide)})
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, f"{path}/{k}" if path else k)
+            return
+        if isinstance(tree, SDVLinear):
+            d_in = tree.words.shape[-2]      # [d_in, G] / [L, d_in, G]
+            stack = tree.words.shape[0] if tree.words.ndim == 3 else 1
+            macs = rows * d_in * tree.d_out * stack
+            route, reason = ops.select_packed_route(
+                rows, plan=tree.plan, use_kernel=use_kernel, explain=True)
+            wide = macs if route == "ref" else \
+                sdv_num_multiplies(rows, tree.d_out, d_in,
+                                   tree.plan) * stack
+            add(path, "sdv_matmul", tree.plan.spec.name,
+                describe_plan(tree.plan), route, reason, macs, wide)
+        elif isinstance(tree, BSEGConv):
+            channels = tree.tap_sum.shape[-1]
+            stack = tree.tap_sum.shape[0] if tree.tap_sum.ndim == 2 else 1
+            macs = rows * channels * tree.taps
+            route, reason = ops.select_conv1d_route(
+                tree.plan, use_kernel=use_kernel, explain=True)
+            wide = macs if route == "ref" else \
+                rows * channels * bseg_num_multiplies(
+                    tree.taps, tree.taps, tree.plan)   # one output step
+            add(path, "bseg_conv1d", tree.plan.spec.name,
+                describe_plan(tree.plan), route, reason,
+                macs * stack, wide * stack)
+        elif isinstance(tree, PackedLinear):
+            d_in = tree.words.shape[-2]
+            stack = 1                    # stacked blocks / expert banks
+            for s in tree.words.shape[:-2]:
+                stack *= s
+            macs = rows * d_in * tree.d_out * stack
+            add(path, "quant_matmul", "memory", f"w{tree.bits} lane words",
+                "quant_matmul", "memory packing only: density 1",
+                macs, macs)
+
+    walk(qparams, "")
+    return stats
+
+
+def packed_utilization(qparams: Any, rows: int,
+                       use_kernel: bool = True) -> Dict[str, Any]:
+    """Aggregate achieved MACs/wide-multiply for one decode step."""
+    stats = packed_layer_stats(qparams, rows, use_kernel)
+    macs = sum(s["macs"] for s in stats)
+    wide = sum(s["wide_multiplies"] for s in stats)
+    kernel_routed = [s for s in stats if s["route"] != "ref"
+                     and s["kind"] != "quant_matmul"]
+    return {
+        "rows": rows,
+        "packed_layers": len(stats),
+        "kernel_routed_layers": len(kernel_routed),
+        "macs_per_step": macs,
+        "wide_multiplies_per_step": wide,
+        "density_achieved": macs / max(wide, 1),
+        "layers": stats,
+    }
+
+
+# ---------------------------------------------------------------------------
+# the engine-side registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Accumulates engine observations; ``snapshot()`` is the JSON
+    export (everything in it is a plain int/float/str/list/dict)."""
+    clock: Callable[[], float]
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    queue_wait_s: List[float] = dataclasses.field(default_factory=list)
+    depth_samples: List[int] = dataclasses.field(default_factory=list)
+    rejected: int = 0
+    tokens_out: int = 0
+    waves: int = 0
+    wave_steps: int = 0
+    wave_wall_s: float = 0.0
+    per_bucket: Dict[str, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict)
+    started_t: Optional[float] = None
+    finished_t: Optional[float] = None
+
+    def record_start(self) -> None:
+        if self.started_t is None:
+            self.started_t = self.clock()
+
+    def record_completion(self, *, submit_t: float, start_t: float,
+                          finish_t: float, n_tokens: int) -> None:
+        self.record_start()
+        self.latencies_s.append(finish_t - submit_t)
+        self.queue_wait_s.append(start_t - submit_t)
+        self.tokens_out += n_tokens
+        self.finished_t = finish_t
+
+    def record_wave(self, bucket_key: str, *, steps: int, wall_s: float,
+                    requests: int) -> None:
+        self.waves += 1
+        self.wave_steps += steps
+        self.wave_wall_s += wall_s
+        b = self.per_bucket.setdefault(
+            bucket_key, {"waves": 0, "steps": 0, "wall_s": 0.0,
+                         "requests": 0})
+        b["waves"] += 1
+        b["steps"] += steps
+        b["wall_s"] += wall_s
+        b["requests"] += requests
+
+    def record_rejection(self) -> None:
+        self.rejected += 1
+
+    def sample_depth(self, depth: int) -> None:
+        self.depth_samples.append(depth)
+
+    def set_bucket_utilization(self, bucket_key: str,
+                               util: Dict[str, Any]) -> None:
+        b = self.per_bucket.setdefault(
+            bucket_key, {"waves": 0, "steps": 0, "wall_s": 0.0,
+                         "requests": 0})
+        b["utilization"] = util
+
+    def snapshot(self) -> Dict[str, Any]:
+        span = 0.0
+        if self.started_t is not None and self.finished_t is not None:
+            span = max(self.finished_t - self.started_t, 1e-9)
+        depth = self.depth_samples
+        return {
+            "requests_completed": len(self.latencies_s),
+            "requests_rejected": self.rejected,
+            "tokens_out": self.tokens_out,
+            "tokens_per_s": self.tokens_out / span if span else 0.0,
+            "latency": latency_summary(self.latencies_s),
+            "queue_wait": latency_summary(self.queue_wait_s),
+            "queue_depth": {
+                "mean": (sum(depth) / len(depth)) if depth else 0.0,
+                "max": max(depth) if depth else 0,
+            },
+            "waves": {"count": self.waves, "steps": self.wave_steps,
+                      "wall_s": self.wave_wall_s},
+            "buckets": self.per_bucket,
+        }

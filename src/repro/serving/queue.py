@@ -1,0 +1,183 @@
+"""Request queue + continuous batcher (the serving front end).
+
+Requests arrive one at a time (``Request``: prompt tokens, a decode
+budget, an optional absolute deadline) and are coalesced into a small
+set of *bucket shapes* — the (batch, s_max) pairs the engine has
+warmed up, compiled, and plan-resolved.  The packing technique only
+pays off when the wide datapath is kept full, so the batcher's whole
+job is shape discipline: every wave the engine runs has one of a
+handful of static shapes, each of which the planner has already
+optimized (`engine.py` resolves plans per bucket).
+
+Bucket assignment is deterministic: the smallest ``s_max`` that holds
+``len(prompt) + new_tokens``, padded to the bucket (pad slots feed a
+fixed pad token and are discarded).  Flush policy, in priority order:
+
+  * **full bucket** — a bucket has ``batch`` pending requests;
+  * **deadline** — the oldest pending request in a bucket could miss
+    its deadline if the flush waited any longer (``est_wave_s`` is the
+    caller's estimate of one wave's wall clock);
+  * **budget** — total queued requests exceed the *soft* budget
+    (``flush_budget``): the deepest bucket flushes partially rather
+    than letting latency build while waiting to fill.
+
+Past the *hard* budget (``queue_budget``), ``submit`` raises
+``Backpressure`` — the caller sheds load instead of queueing unbounded
+work (the engine surfaces this to its clients).
+
+The clock is injectable (``clock=`` returns seconds, monotonic), so
+every flush rule is unit-testable with a fake clock — no sleeps in the
+test suite.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+class Backpressure(RuntimeError):
+    """Raised by ``submit`` when the queue is at its hard budget."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketShape:
+    """One compiled decode shape: ``batch`` KV slots of ``s_max``
+    positions (prompt + generated tokens both count)."""
+    batch: int
+    s_max: int
+
+    @property
+    def key(self) -> str:
+        return f"b{self.batch}.s{self.s_max}"
+
+
+def default_buckets(batch: int = 8,
+                    s_maxes: Sequence[int] = (32, 64, 128)
+                    ) -> Tuple[BucketShape, ...]:
+    """The default bucket ladder: one batch width, power-of-two
+    sequence capacities (compile cost is per shape, so the ladder is
+    deliberately short)."""
+    return tuple(BucketShape(batch, s) for s in sorted(s_maxes))
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request.
+
+    ``deadline`` is an *absolute* clock value (same clock as the
+    batcher's); ``None`` means best-effort.  ``rid`` is assigned by
+    the batcher; ``submit_t`` too, unless the caller pre-stamps it
+    (a load generator stamps the *scheduled arrival* time, so that a
+    wave in flight at arrival time cannot hide queueing delay from
+    the latency accounting — coordinated omission).
+    """
+    prompt: Tuple[int, ...]
+    new_tokens: int
+    deadline: Optional[float] = None
+    rid: int = -1
+    submit_t: Optional[float] = None
+
+    def __post_init__(self):
+        self.prompt = tuple(int(t) for t in self.prompt)
+        if not self.prompt:
+            raise ValueError("empty prompt")
+        if self.new_tokens < 1:
+            raise ValueError(f"new_tokens must be >= 1, got "
+                             f"{self.new_tokens}")
+
+    @property
+    def total_tokens(self) -> int:
+        return len(self.prompt) + self.new_tokens
+
+
+def bucket_for(request: Request,
+               buckets: Sequence[BucketShape]) -> BucketShape:
+    """Deterministic bucket assignment: the smallest ``s_max`` that
+    holds the request end to end.  Raises ``ValueError`` when no
+    bucket fits (the caller rejects the request outright — there is no
+    shape that could ever run it)."""
+    for b in sorted(buckets, key=lambda b: b.s_max):
+        if request.total_tokens <= b.s_max:
+            return b
+    raise ValueError(
+        f"request needs {request.total_tokens} positions; largest "
+        f"bucket holds {max(b.s_max for b in buckets)}")
+
+
+class ContinuousBatcher:
+    """Admits requests and hands the engine bucket-shaped batches."""
+
+    def __init__(self, buckets: Sequence[BucketShape], *,
+                 clock: Callable[[], float] = time.monotonic,
+                 queue_budget: int = 64,
+                 flush_budget: Optional[int] = None):
+        if not buckets:
+            raise ValueError("need at least one bucket shape")
+        self.buckets = tuple(sorted(buckets, key=lambda b: b.s_max))
+        self.clock = clock
+        self.queue_budget = queue_budget
+        #: soft budget: queue depth at which a partial flush is forced
+        self.flush_budget = queue_budget // 2 \
+            if flush_budget is None else flush_budget
+        self._pending: Dict[BucketShape, List[Request]] = {
+            b: [] for b in self.buckets}
+        self._next_rid = 0
+
+    def depth(self) -> int:
+        return sum(len(q) for q in self._pending.values())
+
+    def pending(self, bucket: BucketShape) -> int:
+        return len(self._pending[bucket])
+
+    def submit(self, request: Request) -> Request:
+        """Assign a bucket + rid and enqueue; raises ``Backpressure``
+        at the hard budget and ``ValueError`` when no bucket fits."""
+        bucket = bucket_for(request, self.buckets)   # reject unfittable
+        if self.depth() >= self.queue_budget:
+            raise Backpressure(
+                f"queue at budget ({self.queue_budget} requests)")
+        request.rid = self._next_rid
+        self._next_rid += 1
+        if request.submit_t is None:
+            request.submit_t = self.clock()
+        self._pending[bucket].append(request)
+        return request
+
+    def _deadline_due(self, q: List[Request], est_wave_s: float) -> bool:
+        now = self.clock()
+        return any(r.deadline is not None
+                   and r.deadline <= now + est_wave_s for r in q)
+
+    def ready(self, *, est_wave_s: float = 0.0,
+              force: bool = False
+              ) -> Optional[Tuple[BucketShape, List[Request]]]:
+        """The next batch to run, or ``None`` when no flush rule fires.
+
+        Requests pop oldest-first within their bucket.  ``force=True``
+        drains the fullest non-empty bucket regardless of the rules
+        (the engine's drain path).
+        """
+        # full buckets first, smallest shape first (cheapest wave)
+        for b in self.buckets:
+            if len(self._pending[b]) >= b.batch:
+                return b, self._pop(b)
+        for b in self.buckets:
+            if self._pending[b] and self._deadline_due(self._pending[b],
+                                                       est_wave_s):
+                return b, self._pop(b)
+        over_budget = self.depth() > self.flush_budget
+        if force or over_budget:
+            # deepest bucket, smaller shape on ties; the key string
+            # breaks exact ties (BucketShape itself is unordered)
+            depths = [(len(q), -b.s_max, -b.batch, b.key, b)
+                      for b, q in self._pending.items() if q]
+            if depths:
+                b = max(depths)[-1]
+                return b, self._pop(b)
+        return None
+
+    def _pop(self, bucket: BucketShape) -> List[Request]:
+        q = self._pending[bucket]
+        take, self._pending[bucket] = q[:bucket.batch], q[bucket.batch:]
+        return take

@@ -64,8 +64,12 @@ RNG = np.random.default_rng(41)
 #: the PR-4 acceptance surface).  A conv plan with w_i <= 7 and odd
 #: taps on any of these must land on a kernel route, never ref.
 CONV_IMPLEMENTED = ("int32", "fp32m", "dsp48e2", "dsp58")
-#: datapaths the SDV GEMM kernels implement (int32 storage words).
-MATMUL_KERNEL_DATAPATHS = ("int32",)
+#: datapaths the SDV GEMM/GEMV kernels implement (PR-5: the kernels
+#: are word-generic — int32 words plus the int64 DSP48E2/DSP58
+#: emulation words; only FP32M stays ref, because fp32 rounding breaks
+#: SDV spill-over tracking, a paper constraint rather than an
+#: implementation gap).
+MATMUL_KERNEL_DATAPATHS = ("int32", "dsp48e2", "dsp58")
 
 # every (w_bits, a_bits) config the invariant sweep enumerates
 BIT_CONFIGS = [(4, 4), (3, 5), (5, 2), (2, 2), (4, 8), (8, 8)]
@@ -144,8 +148,10 @@ def test_conv1d_route_explain_invariants(wb, ab):
 
 @pytest.mark.parametrize("wb,ab", BIT_CONFIGS)
 def test_matmul_route_explain_invariants(wb, ab):
-    """The matmul side keeps its (documented) int32-only kernel gate:
-    the reason must say so, and cost/dispatch must agree."""
+    """The matmul datapath gap is closed: every exact-wrap datapath
+    (int32 AND the wide DSP48E2/DSP58 emulation words) lands on an SDV
+    kernel route; only FP32M refs, and its reason names the rounding
+    constraint — no int32-only storage reason remains."""
     layer = _mm_layer(wb, ab)
     for plan in planner.enumerate_plans(layer):
         route, reason = planner.route_for(layer, plan)
@@ -157,7 +163,7 @@ def test_matmul_route_explain_invariants(wb, ab):
             assert route in ("sdv_matmul", "sdv_matvec"), (plan, route)
         else:
             assert route == "ref", (plan, route)
-            assert ("int32" in reason) or ("fp32" in reason), reason
+            assert "fp32" in reason and "int32" not in reason, reason
 
 
 def test_planner_choice_route_matches_dispatch():
@@ -230,18 +236,24 @@ def test_conv1d_datapath_diff(spec_name):
         assert (np.asarray(y) == want).all(), plan
 
 
-_MM_EXEC_LAYER = _mm_layer(4, 4)
-_MM_EXEC_PLANS = planner.enumerate_plans(_MM_EXEC_LAYER)
+_MM_EXEC_LAYERS = [_mm_layer(4, 4),
+                   # W4A8: the wide-word payoff config — DSP48E2/DSP58
+                   # pack more lanes than INT32 (the 11-bit lane leaves
+                   # only 2 on the 32-bit word)
+                   _mm_layer(4, 8)]
+_MM_EXEC_CASES = [(ly, p) for ly in _MM_EXEC_LAYERS
+                  for p in planner.enumerate_plans(ly)]
 
 
 @pytest.mark.parametrize(
-    "plan", _MM_EXEC_PLANS,
-    ids=[_plan_id(p) for p in _MM_EXEC_PLANS])
-def test_matmul_datapath_diff(plan):
-    """Every enumerable W4A4 SDV plan through ``packed_matmul`` (auto
-    route: int32 words on the kernels, wide words on the int64-safe
-    jnp ref decode) == the integer GEMM oracle."""
-    ly = _MM_EXEC_LAYER
+    "ly,plan", _MM_EXEC_CASES,
+    ids=[f"w{ly.w_bits}a{ly.a_bits}-{_plan_id(p)}"
+         for ly, p in _MM_EXEC_CASES])
+def test_matmul_datapath_diff(ly, plan):
+    """Every enumerable W4A4/W4A8 SDV plan through ``packed_matmul``
+    (auto route: int32 words AND the int64 DSP48E2/DSP58 emulation
+    words on the kernels; fp32m on the jnp ref decode) == the integer
+    GEMM oracle."""
     rng = np.random.default_rng(zlib.crc32(_plan_id(plan).encode()))
     w_int = jnp.asarray(rng.integers(-(1 << (plan.w_a - 1)),
                                      1 << (plan.w_a - 1),
@@ -249,10 +261,49 @@ def test_matmul_datapath_diff(plan):
     lo, hi = ((-(1 << (plan.w_b - 1)), 1 << (plan.w_b - 1))
               if plan.signed_b else (0, 1 << plan.w_b))
     x = jnp.asarray(rng.integers(lo, hi, (ly.rows, ly.k)), jnp.int32)
+    route = ops.select_packed_route(ly.rows, plan=plan)
+    if plan.spec.name in MATMUL_KERNEL_DATAPATHS:
+        # the matmul gap stays closed: exact-wrap words -> kernels
+        assert route in ("sdv_matmul", "sdv_matvec"), (plan, route)
     words = ops.prepare_sdv_weights(w_int, plan)
     y = ops.packed_matmul(x, words, plan=plan, m=ly.m)
     want = np.asarray(x) @ np.asarray(w_int).T
-    assert (np.asarray(y) == want).all(), plan
+    assert (np.asarray(y) == want).all(), (plan, route)
+
+
+def test_overrun_storage_layout_degrades_to_lossless_ref():
+    """A hand-built plan whose packed field + parked sign bits overrun
+    the datapath word must (a) route to ref with the overrun reason,
+    not raise in auto, and (b) still pack + execute bit-exact — the
+    storage words widen to int64 so the jnp ref decode is lossless."""
+    bad = SDVPlan(spec=INT32, w_a=4, w_b=8, lane=11, n=4,
+                  signed_a=True, signed_b=True)
+    assert bad.packed_width + bad.n > 32
+    route, reason = ops.select_packed_route(4, plan=bad, explain=True)
+    assert route == "ref" and "overruns" in reason
+    with pytest.raises(ValueError, match="overruns"):
+        ops.select_packed_route(4, plan=bad, mode="sdv_matmul")
+    rng = np.random.default_rng(11)
+    w_int = jnp.asarray(rng.integers(-8, 8, (10, 6)))
+    x = jnp.asarray(rng.integers(-128, 128, (4, 6)), jnp.int32)
+    words = ops.prepare_sdv_weights(w_int, bad)
+    assert words.dtype == jnp.int64          # widened, not truncated
+    y = ops.packed_matmul(x, words, plan=bad, m=10)
+    assert (np.asarray(y) == np.asarray(x) @ np.asarray(w_int).T).all()
+
+
+def test_wide_word_matmul_density_beats_int32():
+    """The point of closing the matmul corner: at W4A8 the DSP48E2/
+    DSP58 words pack more lanes per wide multiply than INT32, and those
+    plans now land on a kernel route instead of ref."""
+    from repro.core.datapath import DSP48E2, plan_sdv
+    wide = plan_sdv(DSP48E2, 4, 8, signed_a=True, signed_b=True,
+                    park_sign_bits=True)
+    narrow = plan_sdv(INT32, 4, 8, signed_a=True, signed_b=True,
+                      park_sign_bits=True)
+    assert wide.n > narrow.n, (wide.n, narrow.n)
+    route, reason = ops.select_packed_route(4, plan=wide, explain=True)
+    assert route in ("sdv_matmul", "sdv_matvec"), (route, reason)
 
 
 def test_conv2d_full_word_wrapped_bias_plan():
@@ -297,8 +348,9 @@ def test_plan_bseg_rejects_biased_word_overrun():
 
 
 def test_conv_sdv_plan_overrides_bit_exact():
-    """Planner SDV choices for convs (the im2col override path) on the
-    int32 word: every enumerable override == the conv oracle."""
+    """Planner SDV choices for convs (the im2col override path) on
+    every kernel-capable word (int32 + the int64 emulation words):
+    every enumerable override == the conv oracle."""
     ly = _CONV_EXEC_LAYER
     base = plan_bseg(INT32, ly.w_bits, ly.a_bits)
     x = jnp.asarray(RNG.integers(0, 16, (1, ly.h, ly.w, ly.c_in)),
@@ -306,7 +358,8 @@ def test_conv_sdv_plan_overrides_bit_exact():
     w = jnp.asarray(RNG.integers(-8, 8, (ly.c_out, ly.c_in, 3, 3)),
                     jnp.int8)
     want = np.asarray(ref.conv2d_int_ref(x, w))
-    overrides = [p for p in planner.enumerate_sdv_plans(ly, specs=[INT32])]
+    overrides = [p for p in planner.enumerate_sdv_plans(
+        ly, specs=[DATAPATHS[n] for n in MATMUL_KERNEL_DATAPATHS])]
     assert overrides
     for sdv in overrides:
         y = ops.packed_conv2d(x, w, plan=base, mode="im2col",

@@ -151,16 +151,20 @@ def test_cost_penalizes_ref_fallbacks():
     cost = planner.score_plan(layer, fp32m)
     assert cost.route == "ref" and "fp32" in cost.reason
     assert cost.score >= layer.macs          # naive MACs x penalty
-    # the emulation datapaths land on ref too (int64 words)
+    # the emulation datapaths are kernel routes now (word-generic SDV
+    # GEMM, int64 emulation words) — and at W4A8 they pack 3 lanes vs
+    # INT32's 2, so the wide word *wins* the layer
     dsp = plan_sdv(DATAPATHS["dsp48e2"], 4, 8, park_sign_bits=True)
     cost48 = planner.score_plan(layer, dsp)
-    assert cost48.route == "ref" and "int32" in cost48.reason
-    # an int32 kernel plan must always beat both
+    assert cost48.route == "sdv_matmul", cost48.reason
+    int32_cost = planner.score_plan(
+        layer, plan_sdv(INT32, 4, 8, park_sign_bits=True))
+    assert int32_cost.route == "sdv_matmul"
+    assert cost48.score < int32_cost.score < cost.score
     choice = planner.choose_plan(layer)
-    assert choice.plan.spec.name == "int32"
+    assert choice.plan.spec.name in ("dsp48e2", "dsp58")
     assert choice.cost.route == "sdv_matmul"
-    assert choice.cost.score < cost.score
-    assert choice.cost.score < cost48.score
+    assert choice.cost.score <= cost48.score
 
 
 def test_cost_conv_routes():
@@ -233,13 +237,17 @@ def test_route_explain_tuples():
         (1, 8, 8, 3), (16, 3, 3, 3), plan=plan_bseg(INT32, 4, 4),
         explain=True)
     assert route == "bseg_conv2d"
-    # int64-word datapaths on the MATMUL side: auto -> ref with a
-    # reason, explicit raises (the SDV GEMM kernels are still int32)
+    # int64-word datapaths run on the word-generic MATMUL kernels now
+    # (x64 is on in conftest, backend is CPU interpret); fp32m still
+    # refuses — rounding breaks SDV spill tracking
     dsp = plan_sdv(DATAPATHS["dsp58"], 4, 8, park_sign_bits=True)
     route, reason = ops.select_packed_route(64, plan=dsp, explain=True)
-    assert route == "ref" and "int32" in reason
-    with pytest.raises(ValueError):
-        ops.select_packed_route(64, plan=dsp, mode="sdv_matmul")
+    assert route == "sdv_matmul" and "GEMV_MAX_ROWS" in reason
+    assert ops.select_packed_route(64, plan=dsp, mode="sdv_matmul") \
+        == "sdv_matmul"
+    with pytest.raises(ValueError, match="fp32"):
+        ops.select_packed_route(64, plan=plan_sdv(FP32M, 4, 8),
+                                mode="sdv_matmul")
     # ... while the CONV side runs them on the word-generic kernels
     bdsp = plan_bseg(DATAPATHS["dsp48e2"], 4, 4)
     route, reason = ops.select_conv_route((1, 8, 8, 3), (16, 3, 3, 3),
@@ -340,7 +348,11 @@ def test_serve_params_plan_policy_auto_bit_exact():
     leaves = [qp["layer"]["kernel"], qp["lm_head"]]
     assert all(isinstance(v, SDVLinear) for v in leaves)
     for leaf in leaves:
-        assert leaf.plan.spec.exact_wrap and leaf.plan.spec.w_word <= 32
+        # planner choices must land on a kernel route (wide words
+        # included — the W4A8 winner is a DSP emulation word now)
+        assert leaf.plan.spec.exact_wrap
+        route = ops.select_packed_route(12, plan=leaf.plan)
+        assert route in ("sdv_matmul", "sdv_matvec"), leaf.plan
         _assert_sdv_leaf_bit_exact(leaf)
     with pytest.raises(ValueError):
         serve_params(_serve_tree(), compute="sdv", plan_policy="bogus")
@@ -361,14 +373,28 @@ def test_serve_params_plan_policy_cache_roundtrip(tmp_path):
     assert qp1["lm_head"].plan == qp2["lm_head"].plan
 
 
-def test_serve_params_warns_on_ref_fallback():
+def test_serve_params_warns_on_ref_fallback(monkeypatch):
     """A layer whose best plan still lands on the pure-jnp ref route is
-    surfaced, not silently degraded (W16A16 fits no int32 kernel)."""
+    surfaced, not silently degraded.  With the matmul datapath gap
+    closed there is no real bit config that all-refs on this backend
+    (every exact-wrap word has a kernel now), so the planner choice is
+    doctored to a ref route — the warn path itself is what's under
+    test."""
+    import dataclasses
+    from repro import planner as planner_mod
     from repro.models.quantized import serve_params
+    real_choose = planner_mod.choose_plan
+
+    def ref_choice(layer, *a, **kw):
+        c = real_choose(layer, *a, **kw)
+        return dataclasses.replace(
+            c, cost=dataclasses.replace(c.cost, route="ref",
+                                        reason="forced ref (test)"))
+    monkeypatch.setattr(planner_mod, "choose_plan", ref_choice)
     tree = {"lm_head": jnp.asarray(RNG.standard_normal((48, 32)),
                                    jnp.float32)}
     with pytest.warns(UserWarning, match="ref route"):
-        serve_params(tree, bits=16, act_bits=16, min_size=1,
+        serve_params(tree, bits=4, act_bits=8, min_size=1,
                      compute="sdv", plan_policy="auto")
 
 

@@ -1,0 +1,378 @@
+"""Serving-engine tests: fake-clock batcher unit tests, engine-level
+bit-exactness of mixed streams vs per-request execution, plan-policy
+default fallback, decode-timing sync, metrics accounting, and the
+loadgen/BENCH_5 schema."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (Backpressure, BucketShape, ContinuousBatcher,
+                           Request, bucket_for, default_plan_policy,
+                           latency_summary, packed_utilization)
+from repro.serving.engine import Engine, Session, SessionTable
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _buckets():
+    return (BucketShape(4, 16), BucketShape(4, 32))
+
+
+# ---------------------------------------------------------------------------
+# batcher (fake clock, no jax)
+# ---------------------------------------------------------------------------
+
+def test_bucket_assignment_deterministic():
+    bs = _buckets()
+    # smallest s_max that holds prompt + new_tokens
+    assert bucket_for(Request((1, 2, 3), 4), bs) == BucketShape(4, 16)
+    assert bucket_for(Request((1,) * 12, 4), bs) == BucketShape(4, 16)
+    assert bucket_for(Request((1,) * 13, 4), bs) == BucketShape(4, 32)
+    with pytest.raises(ValueError, match="largest bucket"):
+        bucket_for(Request((1,) * 30, 10), bs)
+    # assignment is a pure function of the request: same in any order
+    for _ in range(3):
+        assert bucket_for(Request((1,) * 5, 8), bs) == BucketShape(4, 16)
+
+
+def test_flush_on_full_bucket():
+    clock = FakeClock()
+    b = ContinuousBatcher(_buckets(), clock=clock)
+    for i in range(3):
+        b.submit(Request((1, 2), 4))
+        assert b.ready() is None         # not full, no deadline, small
+    b.submit(Request((1, 2), 4))
+    got = b.ready()
+    assert got is not None
+    bucket, reqs = got
+    assert bucket == BucketShape(4, 16) and len(reqs) == 4
+    assert [r.rid for r in reqs] == [0, 1, 2, 3]     # oldest first
+    assert b.depth() == 0
+
+
+def test_flush_on_deadline():
+    clock = FakeClock()
+    b = ContinuousBatcher(_buckets(), clock=clock)
+    b.submit(Request((1, 2), 4, deadline=10.0))
+    assert b.ready(est_wave_s=1.0) is None     # deadline far away
+    clock.advance(8.0)
+    assert b.ready(est_wave_s=1.0) is None     # 8 + 1 < 10: still ok
+    clock.advance(1.5)
+    got = b.ready(est_wave_s=1.0)              # 9.5 + 1 > 10: flush now
+    assert got is not None and len(got[1]) == 1
+    # a deadline-free request never triggers the deadline rule
+    b.submit(Request((1, 2), 4))
+    clock.advance(100.0)
+    assert b.ready(est_wave_s=1.0) is None
+
+
+def test_flush_on_budget_and_backpressure():
+    clock = FakeClock()
+    b = ContinuousBatcher(_buckets(), clock=clock, queue_budget=6,
+                          flush_budget=2)
+    b.submit(Request((1,) * 3, 4))
+    b.submit(Request((1,) * 20, 4))            # other bucket
+    assert b.ready() is None                   # at soft budget, not over
+    b.submit(Request((1,) * 4, 4))
+    got = b.ready()                            # over soft budget: partial
+    assert got is not None
+    bucket, reqs = got
+    assert bucket == BucketShape(4, 16) and len(reqs) == 2   # deepest
+    # hard budget: submit raises Backpressure
+    for _ in range(5):
+        b.submit(Request((1, 2), 4))
+    assert b.depth() == 6
+    with pytest.raises(Backpressure):
+        b.submit(Request((1, 2), 4))
+    # force drains the deepest bucket even under budget
+    got = b.ready(force=True)
+    assert got is not None and len(got[1]) == 4
+
+
+def test_force_flush_breaks_bucket_ties():
+    """Two buckets with equal s_max (different batch widths) must not
+    crash the budget/force tie-break (BucketShape is unordered)."""
+    clock = FakeClock()
+    b = ContinuousBatcher((BucketShape(2, 32), BucketShape(4, 32)),
+                          clock=clock)
+    b.submit(Request((1,) * 20, 4))
+    b.submit(Request((1,) * 20, 4))
+    drained = []
+    while b.depth():
+        got = b.ready(force=True)
+        assert got is not None
+        drained.append(got)
+    assert sum(len(reqs) for _, reqs in drained) == 2
+
+
+def test_loadgen_backdates_submit_to_arrival():
+    """The open-loop driver stamps latency from the scheduled arrival
+    time, so queueing delay behind a busy wave is counted, never
+    hidden (coordinated omission)."""
+    clock = FakeClock(5.0)
+    b = ContinuousBatcher(_buckets(), clock=clock)
+    r = b.submit(Request((1, 2), 4, submit_t=3.25))
+    assert r.submit_t == 3.25                # pre-stamped: kept
+    r2 = b.submit(Request((1, 2), 4))
+    assert r2.submit_t == 5.0                # unstamped: clock
+
+
+def test_session_table_slot_reuse():
+    t = SessionTable(3)
+    s0 = Session(Request((1,), 1, rid=0), 0.0)
+    s1 = Session(Request((1,), 1, rid=1), 0.0)
+    s2 = Session(Request((1,), 1, rid=2), 0.0)
+    assert [t.join(s) for s in (s0, s1, s2)] == [0, 1, 2]
+    with pytest.raises(RuntimeError):
+        t.join(Session(Request((1,), 1, rid=3), 0.0))
+    t.leave(1)                                  # mid-wave leave
+    assert t.free_slots() == 1
+    s3 = Session(Request((1,), 1, rid=3), 0.0)
+    assert t.join(s3) == 1                      # lowest free slot reused
+    assert [i for i, _ in t.active()] == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# plan-policy default (cache file present -> cache, else auto)
+# ---------------------------------------------------------------------------
+
+def test_default_plan_policy_fallback(tmp_path):
+    missing = str(tmp_path / "nope.json")
+    assert default_plan_policy(missing) == "auto"
+    present = tmp_path / "plans.json"
+    present.write_text(json.dumps({"version": 1, "entries": {}}))
+    assert default_plan_policy(str(present)) == "cache"
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    from repro.configs.registry import get_arch
+    from repro.models import init_params, values, Rules
+    cfg = get_arch("tinyllama-1.1b").reduced()
+    rules = Rules(tp=None, fsdp=None, ep=None, batch=())
+    params = values(init_params(cfg, rules, jax.random.PRNGKey(0)))
+    return cfg, params
+
+
+def test_engine_resolves_plan_policy(tiny_setup, tmp_path):
+    cfg, params = tiny_setup
+    eng = Engine(cfg, params, compute="sdv",
+                 plan_cache=str(tmp_path / "missing.json"))
+    assert eng.plan_policy == "auto"            # no cache file: fallback
+    cache = tmp_path / "plans.json"
+    cache.write_text(json.dumps({"version": 1, "entries": {}}))
+    eng2 = Engine(cfg, params, compute="sdv", plan_cache=str(cache))
+    assert eng2.plan_policy == "cache"
+    # memory packing has no lane plans — policy pins to default
+    eng3 = Engine(cfg, params, compute="memory")
+    assert eng3.plan_policy == "default"
+    with pytest.raises(ValueError, match="plan policy"):
+        Engine(cfg, params, compute="sdv", plan_policy="bogus")
+
+
+# ---------------------------------------------------------------------------
+# engine execution: mixed stream == each request alone, bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_engine(tiny_setup):
+    cfg, params = tiny_setup
+    return Engine(cfg, params, compute="sdv",
+                  buckets=(BucketShape(4, 24),))
+
+
+def _mixed_requests(cfg, n=5):
+    rng = np.random.default_rng(7)
+    out = []
+    for _ in range(n):
+        pl = int(rng.integers(2, 10))
+        nt = int(rng.integers(2, 7))
+        out.append((tuple(int(t) for t in rng.integers(0, cfg.vocab, pl)),
+                    nt))
+    return out
+
+def test_engine_mixed_stream_bit_exact_vs_alone(tiny_engine, tiny_setup):
+    """A heterogeneous batch (mixed prompt lengths and decode budgets,
+    padded slots, mid-wave leaves) must produce exactly the tokens each
+    request would produce running alone in the same bucket — per-slot
+    computation is independent, and the engine must keep it that way."""
+    cfg, _ = tiny_setup
+    eng = tiny_engine
+    specs = _mixed_requests(cfg)
+    rids = [eng.submit(p, nt) for p, nt in specs]
+    mixed = {c.rid: c for c in eng.drain()}
+    assert sorted(mixed) == sorted(rids)
+    for (prompt, nt), rid in zip(specs, rids):
+        alone_rid = eng.submit(prompt, nt)      # same engine, same jit
+        alone = {c.rid: c for c in eng.drain()}[alone_rid]
+        assert alone.tokens == mixed[rid].tokens, (rid, prompt)
+        assert len(mixed[rid].tokens) == nt
+
+
+def test_engine_session_slots_cycle(tiny_engine, tiny_setup):
+    """Waves reuse the bucket's session table and cache: after a drain
+    every KV slot is free again, and the same bucket state object
+    persists (no re-init between waves)."""
+    cfg, _ = tiny_setup
+    eng = tiny_engine
+    st_before = eng._states.get("b4.s24")
+    for p, nt in _mixed_requests(cfg, 4):
+        eng.submit(p, nt)
+    eng.drain()
+    st = eng._states["b4.s24"]
+    assert st.sessions.free_slots() == 4
+    if st_before is not None:
+        assert st is st_before
+
+
+def test_engine_backpressure_records_rejection(tiny_setup):
+    cfg, params = tiny_setup
+    eng = Engine(cfg, params, compute="sdv",
+                 buckets=(BucketShape(2, 16),), queue_budget=2)
+    eng.submit((1, 2, 3), 2)
+    eng.submit((1, 2, 3), 2)
+    with pytest.raises(Backpressure):
+        eng.submit((1, 2, 3), 2)
+    assert eng.metrics.snapshot()["requests_rejected"] == 1
+    eng.drain()
+
+
+def test_engine_deadline_metadata(tiny_engine, tiny_setup):
+    cfg, _ = tiny_setup
+    eng = tiny_engine
+    rid = eng.submit((1, 2, 3, 4), 2, deadline=eng.clock() + 60.0)
+    comp = {c.rid: c for c in eng.drain()}[rid]
+    assert comp.met_deadline
+    rid = eng.submit((1, 2, 3, 4), 2, deadline=eng.clock() - 1.0)
+    comp = {c.rid: c for c in eng.drain()}[rid]
+    assert not comp.met_deadline
+
+
+# ---------------------------------------------------------------------------
+# decode timing: sync INSIDE the timed loop (the serve smoke assert)
+# ---------------------------------------------------------------------------
+
+def test_single_batch_loop_syncs_every_step(tiny_setup):
+    """The --engine off loop must call the sync hook once per decode
+    step inside the timed region — the understated-latency audit item
+    (kernelbench._t bug class)."""
+    from repro.launch.serve import single_batch_loop
+    from repro.models import init_cache, serve_params, values, Rules
+    cfg, params = tiny_setup
+    qparams = serve_params(params, bits=4, min_size=1024,
+                           compute="memory")
+    rules = Rules(tp=None, fsdp=None, ep=None, batch=())
+    prompts = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (2, 3)), jnp.int32)
+    new_tokens = 2
+    cache = values(init_cache(cfg, rules, 2, 3 + new_tokens))
+    synced = []
+
+    def sync(x):
+        synced.append(x)
+        return jax.block_until_ready(x)
+
+    gen, dt = single_batch_loop(cfg, qparams, cache, prompts, new_tokens,
+                                sync=sync)
+    steps = prompts.shape[1] + new_tokens - 1
+    assert len(synced) == steps          # one sync per timed step
+    assert gen.shape == (2, new_tokens) and dt > 0
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_latency_summary_percentiles():
+    s = latency_summary([0.010 * (i + 1) for i in range(100)])
+    assert s["count"] == 100
+    assert abs(s["p50_ms"] - 500.0) < 11
+    assert abs(s["p99_ms"] - 990.0) < 11
+    assert latency_summary([])["count"] == 0
+
+
+def test_packed_utilization_matches_density_accounting(tiny_setup):
+    from repro.kernels.sdv_matmul import sdv_num_multiplies
+    from repro.models import serve_params
+    from repro.models.quantized import SDVLinear
+    cfg, params = tiny_setup
+    qp = serve_params(params, bits=4, min_size=1024, compute="sdv",
+                      rows=4)
+    util = packed_utilization(qp, rows=4)
+    assert util["packed_layers"] > 0
+    assert util["kernel_routed_layers"] > 0     # the acceptance gate
+    assert util["density_achieved"] > 1.0       # packing does something
+    # cross-check one layer against the accounting it claims to use
+    by_name = {l["layer"]: l for l in util["layers"]}
+    lm = by_name["lm_head"]
+    leaf = qp["lm_head"]
+    assert isinstance(leaf, SDVLinear)
+    want = sdv_num_multiplies(4, leaf.d_out, leaf.words.shape[-2],
+                              leaf.plan)
+    assert lm["wide_multiplies"] == want
+    assert lm["macs"] == 4 * leaf.words.shape[-2] * leaf.d_out
+
+
+def test_stacked_sdv_packing_slices_under_scan(tiny_setup):
+    """Scanned layer stacks pack as stacked SDVLinear (the serving
+    engine's occupancy depends on it) and slicing the layer axis
+    yields a container the dispatch accepts."""
+    from repro.models import serve_params
+    from repro.models.quantized import SDVLinear, materialize
+    cfg, params = tiny_setup
+    qp = serve_params(params, bits=4, min_size=1024, compute="sdv")
+    stacked = qp["blocks"]["attn"]["wq"]["kernel"]
+    assert isinstance(stacked, SDVLinear) and stacked.words.ndim == 3
+    sliced = jax.tree_util.tree_map(lambda a: a[0], stacked)
+    assert isinstance(sliced, SDVLinear) and sliced.words.ndim == 2
+    # per-layer materialize == slicing the stacked materialize
+    full = np.asarray(materialize(stacked, jnp.float32))
+    one = np.asarray(materialize(sliced, jnp.float32))
+    assert (full[0] == one).all()
+
+
+# ---------------------------------------------------------------------------
+# loadgen + BENCH_5 schema
+# ---------------------------------------------------------------------------
+
+def test_poisson_arrivals_seeded():
+    from repro.serving.loadgen import poisson_arrivals
+    a1 = poisson_arrivals(100.0, 0.5, np.random.default_rng(3))
+    a2 = poisson_arrivals(100.0, 0.5, np.random.default_rng(3))
+    assert a1 == a2 and all(0 <= t < 0.5 for t in a1)
+    assert 10 < len(a1) < 200                   # ~50 expected
+
+
+def test_bench_serving_payload_schema(tmp_path):
+    from repro.serving.loadgen import bench_serving
+    payload = bench_serving(
+        "tinyllama-1.1b", smoke=True, rates=[60.0, 120.0],
+        duration_s=0.25, computes=["sdv", "memory"], prompt_len=4,
+        new_tokens=3, batch=2, s_maxes=[8], weight_bits=4, act_bits=8,
+        plan_policy=None, plan_cache=str(tmp_path / "nope.json"),
+        slo_ms=None, seed=0)
+    assert payload["bench"] == "serving_engine"
+    assert payload["plan_policy"] == "auto"     # no cache file present
+    rates = {(c["compute"], c["rate_per_s"]) for c in payload["curves"]}
+    assert len(rates) == 4                      # 2 computes x 2 rates
+    for c in payload["curves"]:
+        assert c["latency"]["p50_ms"] >= 0
+        assert c["tokens_per_s"] >= 0
+        assert c["requests_completed"] + c["requests_rejected"] > 0
+    # at least one bucket resolved onto a packed kernel route
+    assert any(u["kernel_routed_layers"] > 0
+               for u in payload["bucket_plans"].values())
+    # round-trips through JSON (the BENCH_5 writer)
+    json.loads(json.dumps(payload))
