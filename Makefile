@@ -1,5 +1,5 @@
 .PHONY: test dev-deps planner-smoke planner-test test-datapaths \
-        serve-smoke test-serving
+        test-wide-words serve-smoke test-serving
 
 # tier-1 verify (ROADMAP.md): the whole suite, fail-fast, quiet
 test:
@@ -16,6 +16,13 @@ planner-test: planner-smoke
 # datapath through the packed dispatch, bit-exact vs the oracles
 test-datapaths:
 	PYTHONPATH=src python -m pytest -q tests/test_datapath_diff.py
+
+# wide-word gate: every enumerable DSP48E2/DSP58 plan through the
+# 2-limb int32 kernel routes WITHOUT x64, bit-exact vs the int64
+# oracle, plus the hypothesis limb-carry sweep
+test-wide-words:
+	env -u JAX_ENABLE_X64 PYTHONPATH=src python -m pytest -q \
+	    tests/test_datapath_diff.py -k "no_x64 or limb"
 
 # serving engine: tiny arch through the continuous batcher + Poisson
 # loadgen (scratch JSON, not the tracked BENCH_5), and its test file

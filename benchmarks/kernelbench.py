@@ -6,11 +6,14 @@ Interpret-mode wall time is NOT TPU performance — the derived column
 output; kernels are validated bit-exactly in tests/test_kernels.py.
 
 Standalone:  PYTHONPATH=src python benchmarks/kernelbench.py \
-                 [--json BENCH_3.json] [--size 32] [--smoke]
+                 [--json BENCH_6.json] [--size 32] [--smoke]
 writes the per-PR trajectory file (wall clock + multiply counts),
-including the planner section: the mixed-precision planned UltraNet
-frame (per-layer plans from ``repro.planner``) vs the uniform-default
-packed frame — wall clock, wide-multiply counts, and bit-exactness.
+including the planner section (the mixed-precision planned UltraNet
+frame vs the uniform default), the wide-word section (DSP48E2/DSP58
+plans through the 2-limb int32 kernel routes with ``jax_enable_x64``
+off — the configuration that previously forced the ref fallback), and
+a serving loadgen rerun whose W4A8 buckets resolve onto the wide
+n=3 SDV plan on a kernel route.
 """
 from __future__ import annotations
 
@@ -20,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.datapath import INT32, plan_bseg, plan_sdv
+from repro.core.datapath import DATAPATHS, INT32, plan_bseg, plan_sdv
 from repro.kernels import ops, ref
 from repro.kernels.sdv_matmul import sdv_num_multiplies
 
@@ -85,6 +88,75 @@ def kernel_latencies():
                                             use_kernel=True)),
                  f"{planb.density} MACs per int32 multiply"))
     return rows
+
+
+def wide_word_latencies(repeats: int = 3):
+    """Wide DSP48E2/DSP58 words through the 2-limb int32 kernel routes
+    — ``jax_enable_x64`` off — vs the pure-jnp ref route, which before
+    the limb representation was the *only* way to run these plans
+    without x64 + interpret mode."""
+    assert not jax.config.jax_enable_x64, \
+        "wide-word rows must measure the x64-free configuration"
+    rng = np.random.default_rng(11)
+    rows = []
+    for name in ("dsp48e2", "dsp58"):
+        spec = DATAPATHS[name]
+        plan = plan_sdv(spec, 4, 8, park_sign_bits=True)
+        w_mat = jnp.asarray(rng.integers(-8, 8, (256, 512)), jnp.int32)
+        xq = jnp.asarray(rng.integers(-128, 128, (32, 512)), jnp.int8)
+        words = ops.prepare_sdv_weights(w_mat, plan)
+        route = ops.select_packed_route(32, plan=plan)
+        rows.append((
+            f"wide.sdv_matmul.{name}.32x256x512.us",
+            _t(lambda xq=xq, words=words, plan=plan:
+               ops.packed_matmul(xq, words, plan=plan, m=256), n=repeats),
+            f"route={route}; n={plan.n} MACs/wide multiply, word = 2x "
+            "int32 limbs, x64 off"))
+        rows.append((
+            f"wide.sdv_matmul.{name}.32x256x512.ref.us",
+            _t(lambda xq=xq, words=words, plan=plan:
+               ops.packed_matmul(xq, words, plan=plan, m=256, mode="ref"),
+               n=repeats),
+            "pure-jnp ref route (the retired path's x64-free fallback)"))
+        planb = plan_bseg(spec, 4, 4)
+        wc = jnp.asarray(rng.integers(-8, 8, (16, 8, 3, 3)), jnp.int8)
+        xc = jnp.asarray(rng.integers(0, 16, (1, 16, 16, 8)), jnp.int32)
+        routec = ops.select_conv_route(xc.shape, wc.shape, plan=planb)
+        rows.append((
+            f"wide.bseg_conv2d.{name}.16x16x8c16.us",
+            _t(lambda xc=xc, wc=wc, planb=planb:
+               ops.packed_conv2d(xc, wc, plan=planb), n=repeats),
+            f"route={routec}; density {planb.density} MACs/multiply, "
+            "2-limb word, x64 off"))
+        rows.append((
+            f"wide.bseg_conv2d.{name}.16x16x8c16.ref.us",
+            _t(lambda xc=xc, wc=wc, planb=planb:
+               ops.packed_conv2d(xc, wc, plan=planb, mode="ref"),
+               n=repeats),
+            "pure-jnp ref route (the retired path's x64-free fallback)"))
+    return rows
+
+
+def serving_wide_buckets() -> dict:
+    """Smoke serving loadgen rerun under the auto planner: the W4A8
+    matmul buckets resolve onto the wide DSP48E2 n=3 SDV plan, and the
+    per-bucket plan report shows them on kernel routes (no x64)."""
+    from repro.serving import loadgen
+    payload = loadgen.bench_serving(
+        "tinyllama-1.1b", smoke=True, rates=(30.0,), duration_s=0.5,
+        computes=("sdv",), prompt_len=8, new_tokens=8, batch=4,
+        s_maxes=(24,), weight_bits=4, act_bits=8, plan_policy="auto",
+        plan_cache=None, slo_ms=None, seed=0)
+    return {
+        "arch": payload["arch"],
+        "plan_policy": payload["plan_policy"],
+        "x64_enabled": bool(jax.config.jax_enable_x64),
+        "curves": [{k: c[k] for k in ("compute", "rate_per_s",
+                                      "requests_completed",
+                                      "tokens_per_s") if k in c}
+                   for c in payload["curves"]],
+        "bucket_plans": payload["bucket_plans"],
+    }
 
 
 def ultranet_conv_latencies(size: int = 32, repeats: int = 3):
@@ -252,15 +324,17 @@ def bench_json(path: str, *, size: int = 32, repeats: int = 3) -> dict:
     rows = []
     for fn in (kernel_latencies,
                lambda: ultranet_conv_latencies(size, repeats),
-               packed_vs_naive):
+               packed_vs_naive,
+               lambda: wide_word_latencies(repeats)):
         rows.extend(fn())
     payload = {
-        "pr": 4,
+        "pr": 6,
         "rows": [{"name": n, "us_per_call": us, "derived": str(d)}
                  for n, us, d in rows],
         "ultranet": ultranet_frame(size, repeats=max(1, repeats - 1)),
         "planner": ultranet_planned_vs_default(
             size, repeats=max(1, repeats - 1)),
+        "serving_wide": serving_wide_buckets(),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
@@ -271,14 +345,16 @@ def main() -> None:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", default="BENCH_4.json",
+    ap.add_argument("--json", default="BENCH_6.json",
                     help="trajectory file to write")
     ap.add_argument("--size", type=int, default=32,
                     help="UltraNet bench frame size")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes / single repeat (CI smoke)")
     args = ap.parse_args()
-    jax.config.update("jax_enable_x64", True)
+    # deliberately NO jax_enable_x64: every datapath — including the
+    # wide DSP48E2/DSP58 words, now 2x int32 limb planes — must bench
+    # on the stock 32-bit configuration
 
     size = 16 if args.smoke else args.size
     repeats = 1 if args.smoke else 3
@@ -301,6 +377,14 @@ def main() -> None:
           f"{len(p['layers'])} layers re-planned, "
           f"{len(p['non_int32_datapath_layers'])} on non-INT32 "
           f"datapaths {p['non_int32_datapath_layers']}")
+    s = payload["serving_wide"]
+    for key, util in s["bucket_plans"].items():
+        plans = sorted({(l["plan"], l["datapath"], l["route"])
+                        for l in util["layers"]})
+        print(f"serving bucket {key} (x64={s['x64_enabled']}): "
+              f"{util['kernel_routed_layers']}/{len(util['layers'])} "
+              f"layers kernel-routed, plans "
+              + "; ".join(f"{p} [{d}] route={r}" for p, d, r in plans))
 
 
 if __name__ == "__main__":

@@ -6,10 +6,9 @@ the 512-device dry-run environment, so it runs as its own process).
 """
 import sys
 
-import jax
-
-# DSP48E2/DSP58 emulation words are 48/58-bit -> int64 arithmetic.
-jax.config.update("jax_enable_x64", True)
+# No global jax_enable_x64: the Pallas kernels run the wide
+# DSP48E2/DSP58 words as two int32 limb planes (core.limbs).  Only the
+# core int64 *oracle* timings in paper_tables scope x64 locally.
 
 
 def main() -> None:

@@ -1,16 +1,18 @@
 """Quickstart: the paper's packing arithmetic in 60 lines.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+No ``jax_enable_x64`` anywhere: the wide DSP48E2 48-bit words run as
+two carry-propagating int32 limbs (``repro.core.limbs``) inside the
+Pallas kernels, so every datapath below compiles on a stock backend.
 """
-import jax
-jax.config.update("jax_enable_x64", True)   # DSP48E2 words are 48-bit
+import jax.numpy as jnp
+import numpy as np
 
-import jax.numpy as jnp                      # noqa: E402
-import numpy as np                           # noqa: E402
-
-from repro.core import (DSP48E2, INT32, plan_sdv, plan_bseg,   # noqa: E402
-                        sdv_matvec, bseg_conv1d, sdv_density,
-                        bseg_density)
+from repro.core import (DSP48E2, INT32, plan_sdv, plan_bseg,
+                        sdv_density, bseg_density)
+from repro.kernels import ops
+from repro.kernels.ref import conv1d_causal_ref
 
 rng = np.random.default_rng(0)
 
@@ -20,29 +22,31 @@ print("SDV  density, DSP48E2, INT4:", sdv_density(DSP48E2, 4, 4))
 print("BSEG density, DSP48E2, INT4:", bseg_density(DSP48E2, 4, 4))
 print("SDV  density, TPU int32, W4A4:", sdv_density(INT32, 4, 4))
 
-# --- 2. SDV: pack 4 output channels into one multiplier (Sec. III-C) ----
-plan = plan_sdv(DSP48E2, 4, 4)
+# --- 2. SDV on the DSP48E2 word: 4+ channels per multiply (Sec. III-C) --
+plan = plan_sdv(DSP48E2, 4, 4, park_sign_bits=True)
 W = rng.integers(-8, 8, size=(8, 64))        # int4 weights, 8 outputs
-x = rng.integers(-8, 8, size=(64,))          # int4 activations
-y = sdv_matvec(jnp.asarray(W), jnp.asarray(x), plan)
-assert (np.asarray(y) == W @ x).all()
-print(f"\nSDV matvec: {plan.n} MACs/multiply (lane={plan.lane} bits), "
-      f"bit-exact = True")
+x = rng.integers(-8, 8, size=(2, 64))        # int4 activations, 2 rows
+words = ops.prepare_sdv_weights(jnp.asarray(W, dtype=jnp.int32), plan)
+y = ops.packed_matmul(jnp.asarray(x, dtype=jnp.int32), words, plan=plan, m=8)
+assert (np.asarray(y) == x @ W.T).all()
+print(f"\nSDV matmul on DSP48E2: {plan.n} MACs/wide multiply "
+      f"(lane={plan.lane} bits), word = 2x int32 limbs, bit-exact = True")
 
 # --- 3. BSEG: convolution inside the multiplier (Sec. III-D) ------------
 planb = plan_bseg(DSP48E2, 4, 4)
-taps = rng.integers(-8, 8, size=(1, 5))
-sig = rng.integers(0, 16, size=(1, 100))
-yc = bseg_conv1d(jnp.asarray(taps), jnp.asarray(sig), planb)
-ref = np.correlate(sig[0].astype(np.int64), taps[0].astype(np.int64),
-                   "valid")
-assert (np.asarray(yc)[0] == ref).all()
-print(f"BSEG conv: n_k={planb.n_k} x n_i={planb.n_i} = {planb.density} "
-      f"MACs/multiply, guard bias 2^{planb.lane - 1}, bit-exact = True")
+taps = rng.integers(-8, 8, size=(6, 5))      # 6 channels, 5 taps
+sig = rng.integers(0, 16, size=(1, 100, 6))  # unsigned w_i-bit samples
+kappa, tap_sum = ops.prepare_bseg_taps(jnp.asarray(taps, dtype=jnp.int32),
+                                       planb)
+yc = ops.bseg_conv1d(jnp.asarray(sig, dtype=jnp.int8), kappa, tap_sum,
+                     plan=planb, n_taps=5)
+want = conv1d_causal_ref(jnp.asarray(sig), jnp.asarray(taps))
+assert (np.asarray(yc) == np.asarray(want)).all()
+print(f"BSEG conv on DSP48E2: n_k={planb.n_k} x n_i={planb.n_i} = "
+      f"{planb.density} MACs/multiply, guard bias 2^{planb.lane - 1}, "
+      "bit-exact = True")
 
 # --- 4. the TPU Pallas kernel (interpret mode on CPU) -------------------
-from repro.kernels import ops               # noqa: E402
-
 kplan = plan_sdv(INT32, 4, 8, park_sign_bits=True)
 Wd = rng.integers(-8, 8, size=(128, 256))
 xq = rng.integers(-128, 128, size=(2, 256))

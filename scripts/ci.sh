@@ -6,14 +6,18 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # planner smoke: the mixed-precision plan table must build for the
-# paper's evaluation model
-python -m repro.planner --arch ultranet --smoke
+# paper's evaluation model — with JAX_ENABLE_X64 explicitly unset: the
+# wide DSP48E2/DSP58 plans it prints must be the ones that actually
+# compile on a stock 32-bit backend (2x int32 limb planes, core.limbs)
+env -u JAX_ENABLE_X64 python -m repro.planner --arch ultranet --smoke
 # datapath-diff smoke: one tiny conv through the packed dispatch on
-# EVERY datapath (int32 / fp32m / dsp48e2 / dsp58) must be bit-exact
-# against the integer oracle — the fast gate on the conv-gap closure
-# (the full sweep is tests/test_datapath_diff.py / make test-datapaths)
-python - <<'PY'
-import jax; jax.config.update("jax_enable_x64", True)
+# EVERY datapath (int32 / fp32m / dsp48e2 / dsp58) must hit a kernel
+# route and be bit-exact against the integer oracle, all WITHOUT x64 —
+# the fast gate on the two-limb wide-word representation
+# (the full sweep is tests/test_datapath_diff.py / make test-wide-words)
+env -u JAX_ENABLE_X64 python - <<'PY'
+import jax
+assert not jax.config.jax_enable_x64, "smoke must run the 32-bit config"
 import numpy as np, jax.numpy as jnp
 from repro.core.datapath import DATAPATHS, plan_bseg
 from repro.kernels import ops, ref
@@ -27,7 +31,7 @@ for name in ("int32", "fp32m", "dsp48e2", "dsp58"):
     assert route != "ref", (name, route)
     y = ops.packed_conv2d(x, w, plan=plan, mode="auto", zero_point=0)
     assert (np.asarray(y) == want).all(), name
-    print(f"datapath-diff smoke ok: {name} -> {route}")
+    print(f"datapath-diff smoke ok (x64 off): {name} -> {route}")
 PY
 # the tracked BENCH_4 payload must be well-formed and show the planner
 # actually using a non-INT32 datapath on a kernel route
@@ -85,9 +89,12 @@ print(f"BENCH_5.json ok: {sorted(computes)} x "
       f"{sorted({c['rate_per_s'] for c in payload['curves']})} req/s")
 PY
 # bench smoke: the kernel benchmarks must RUN on tiny shapes (the
-# trajectory JSON goes to a scratch path, not the tracked BENCH_<pr>)
+# trajectory JSON goes to a scratch path, not the tracked BENCH_<pr>);
+# x64 unset — kernelbench asserts the wide-word rows measure the
+# 32-bit configuration
 BENCH_SMOKE="${TMPDIR:-/tmp}/bench_smoke.json"
-python benchmarks/kernelbench.py --smoke --json "$BENCH_SMOKE"
+env -u JAX_ENABLE_X64 python benchmarks/kernelbench.py --smoke \
+    --json "$BENCH_SMOKE"
 # ... and the BENCH_<pr> payload must be well-formed JSON with the
 # planner comparison section
 python - "$BENCH_SMOKE" <<'PY'
@@ -96,5 +103,32 @@ payload = json.load(open(sys.argv[1]))
 assert payload["planner"]["bit_exact_vs_integer_oracle"] is True, payload
 assert payload["planner"]["layers"], "planner section missing layers"
 print(f"bench smoke JSON ok ({len(payload['rows'])} rows + planner)")
+PY
+# the tracked BENCH_6 payload: wide DSP48E2/DSP58 words timed through
+# the compiled 2-limb kernel routes with x64 off, and the serving W4A8
+# buckets resolved onto the wide n=3 SDV plan on a kernel route
+python - BENCH_6.json <<'PY'
+import json, sys
+payload = json.load(open(sys.argv[1]))
+assert payload["pr"] == 6, payload.get("pr")
+wide = [r for r in payload["rows"] if r["name"].startswith("wide.")]
+kern = [r for r in wide if ".ref." not in r["name"]]
+assert kern, "no wide-word kernel-route rows"
+for r in kern:
+    assert r["derived"].startswith("route=") \
+        and not r["derived"].startswith("route=ref"), r
+    assert float(r["us_per_call"]) > 0, r
+names = " ".join(r["name"] for r in kern)
+assert "dsp48e2" in names and "dsp58" in names, names
+s = payload["serving_wide"]
+assert s["x64_enabled"] is False, "serving section must run x64-free"
+assert s["bucket_plans"], "serving section has no bucket plans"
+for key, util in s["bucket_plans"].items():
+    assert util["kernel_routed_layers"] == len(util["layers"]), (key, util)
+plans = {(l["plan"], l["datapath"])
+         for u in s["bucket_plans"].values() for l in u["layers"]}
+assert any("n=3" in p and d == "dsp48e2" for p, d in plans), plans
+print(f"BENCH_6.json ok: {len(kern)} wide kernel rows, serving W4A8 "
+      f"buckets on {sorted(plans)}")
 PY
 exec python -m pytest -x -q "$@"

@@ -11,7 +11,9 @@ This module encodes the paper's Sec. III dimensioning rules:
         2^(L-1) >  min(n_k, n_i) * (2^(w_k-1) - 1) * (2^w_i - 1) + (2^w_l - 1)
 
 Datapaths:
-  * DSP48E2 / DSP58 — the paper's FPGA targets, emulated exactly in int64.
+  * DSP48E2 / DSP58 — the paper's FPGA targets; the kernels carry
+    their >32-bit words as two int32 limbs (``core/limbs.py``), the
+    ``core.bseg``/``core.sdv`` oracles as int64.
   * INT32 — TPU VPU 32-bit integer multiply.  Integer mod-2^32 wrap is
     value-preserving for every bit position below 32, exactly like the
     DSP's 48-bit ALU dropping carries past bit 47, so SDV spill-over

@@ -1,0 +1,226 @@
+"""Two-limb int32 arithmetic for the 33-64-bit DSP words.
+
+A DSP48E2/DSP58 word (48/58 bits, paper Sec. II) does not fit the
+32-bit TPU vector lane, and ``jax_enable_x64`` + interpret mode is not
+an execution path — it is an oracle.  This module represents such a
+word as two int32 limbs, ``value = (hi << 32) | lo (mod 2^64)``, with
+explicit carry propagation: exactly the trick the 48-bit DSP ALU plays
+in hardware, where a wide accumulate is a pair of narrow adds chained
+through a carry.
+
+Why int32 limbs are enough: for ``+``, ``-``, ``*``, ``&``, ``|``,
+``^`` and ``<<`` the int32 bit pattern is identical to the uint32 bit
+pattern (XLA wraps mod 2^32), so unsigned 32-bit arithmetic is free.
+The only unsigned ops that need care are
+
+  * compare (carry/borrow detection): ``a <u b`` is
+    ``(a ^ INT32_MIN) < (b ^ INT32_MIN)`` — XOR-ing the sign bit maps
+    unsigned order onto signed order;
+  * logical shift right: mask off the sign-extension of the arithmetic
+    shift.
+
+All shift amounts and field widths are static Python ints (they come
+from plan geometry), so every branch below is resolved at trace time —
+a ``Limbs`` op lowers to a handful of int32 vector ops and no control
+flow.
+
+``to_int64`` / ``from_int64`` are test oracles only: they need
+``jax_enable_x64`` and exist so the limb arithmetic can be
+differentially pinned against the retained int64 emulation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+I32 = jnp.int32
+_MASK64 = (1 << 64) - 1
+
+
+class Limbs(NamedTuple):
+    """A mod-2^64 integer as two int32 limbs (``lo`` = bits 0..31,
+    ``hi`` = bits 32..63, both carrying uint32 bit patterns).  A
+    NamedTuple, so it is a pytree: it can be a ``fori_loop`` carry or a
+    kernel operand without any registration."""
+    lo: jnp.ndarray
+    hi: jnp.ndarray
+
+    @property
+    def shape(self):
+        return self.lo.shape
+
+
+def _signed32(u: int) -> int:
+    """uint32 bit pattern -> the Python int whose int32 cast has it."""
+    u &= 0xFFFFFFFF
+    return u - (1 << 32) if u >= (1 << 31) else u
+
+
+def const_limbs(value: int):
+    """Python int -> the (lo, hi) pair of Python ints (int32-safe)."""
+    v = value & _MASK64
+    return _signed32(v), _signed32(v >> 32)
+
+
+def full(shape, value: int) -> Limbs:
+    lo, hi = const_limbs(value)
+    return Limbs(jnp.full(shape, lo, I32), jnp.full(shape, hi, I32))
+
+
+def zeros(shape) -> Limbs:
+    return Limbs(jnp.zeros(shape, I32), jnp.zeros(shape, I32))
+
+
+def zeros_like(w: Limbs) -> Limbs:
+    return Limbs(jnp.zeros_like(w.lo), jnp.zeros_like(w.hi))
+
+
+def from_i32(x: jnp.ndarray) -> Limbs:
+    """Sign-extend an int32 value to the 64-bit domain (two's
+    complement mod 2^64: hi is the replicated sign bit)."""
+    x = x.astype(I32)
+    return Limbs(x, x >> 31)
+
+
+def from_u32(x: jnp.ndarray) -> Limbs:
+    """Zero-extend: the int32 bit pattern is an unsigned value."""
+    return Limbs(x.astype(I32), jnp.zeros_like(x, dtype=I32))
+
+
+def map_limbs(w: Limbs, fn) -> Limbs:
+    """Apply a shape-only op (index, broadcast, reshape, transpose,
+    dynamic slice...) to both limbs."""
+    return Limbs(fn(w.lo), fn(w.hi))
+
+
+def _u_lt(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Unsigned a < b on int32 bit patterns (sign-bit XOR trick)."""
+    m = jnp.int32(-(1 << 31))
+    return (a ^ m) < (b ^ m)
+
+
+def _lsr32(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Logical shift right of an int32 bit pattern by static k."""
+    if k <= 0:
+        return x
+    if k >= 32:
+        return jnp.zeros_like(x)
+    return (x >> k) & jnp.int32((1 << (32 - k)) - 1)
+
+
+def add(a: Limbs, b: Limbs) -> Limbs:
+    lo = a.lo + b.lo
+    carry = _u_lt(lo, b.lo).astype(I32)       # lo wrapped past 2^32
+    return Limbs(lo, a.hi + b.hi + carry)
+
+
+def sub(a: Limbs, b: Limbs) -> Limbs:
+    borrow = _u_lt(a.lo, b.lo).astype(I32)
+    return Limbs(a.lo - b.lo, a.hi - b.hi - borrow)
+
+
+def _mul32_wide(x: jnp.ndarray, y: jnp.ndarray):
+    """32x32 -> 64 widening multiply of uint32 bit patterns via 16-bit
+    digits; returns (lo, hi) int32 bit patterns."""
+    m16 = jnp.int32(0xFFFF)
+    x0, x1 = x & m16, _lsr32(x, 16)
+    y0, y1 = y & m16, _lsr32(y, 16)
+    p00 = x0 * y0                             # wraps mod 2^32: fine
+    p01 = x0 * y1
+    p10 = x1 * y0
+    # column sum of bits 16..47: each term < 2^16 (or < 2^16 after the
+    # lsr), so the sum < 3 * 2^16 — no wrap, carries are in t >> 16
+    t = _lsr32(p00, 16) + (p01 & m16) + (p10 & m16)
+    lo = (p00 & m16) | (t << 16)
+    hi = x1 * y1 + _lsr32(p01, 16) + _lsr32(p10, 16) + _lsr32(t, 16)
+    return lo, hi
+
+
+def mul(a: Limbs, b: Limbs) -> Limbs:
+    """Low 64 bits of a*b (mod-2^64 product, signs included: two's
+    complement multiply IS the mod-2^64 multiply)."""
+    lo, hi = _mul32_wide(a.lo, b.lo)
+    # cross terms only touch the hi limb; their own overflow is mod 2^64
+    return Limbs(lo, hi + a.lo * b.hi + a.hi * b.lo)
+
+
+def mul_i32(a: Limbs, x: jnp.ndarray) -> Limbs:
+    """a * sign-extended int32 x (mod 2^64)."""
+    return mul(a, from_i32(x))
+
+
+def shift_left(w: Limbs, k: int) -> Limbs:
+    if k <= 0:
+        return w
+    if k < 32:
+        lo = w.lo << k
+        hi = (w.hi << k) | _lsr32(w.lo, 32 - k)
+        return Limbs(lo, hi)
+    if k < 64:
+        return Limbs(jnp.zeros_like(w.lo), w.lo << (k - 32))
+    return zeros_like(w)
+
+
+def shift_right_logical(w: Limbs, k: int) -> Limbs:
+    if k <= 0:
+        return w
+    if k < 32:
+        lo = _lsr32(w.lo, k) | (w.hi << (32 - k))
+        return Limbs(lo, _lsr32(w.hi, k))
+    if k < 64:
+        return Limbs(_lsr32(w.hi, k - 32), jnp.zeros_like(w.hi))
+    return zeros_like(w)
+
+
+def mod_pow2(w: Limbs, bits: int) -> Limbs:
+    """Keep the low ``bits`` bits (mod 2^bits)."""
+    if bits <= 0:
+        return zeros_like(w)
+    if bits < 32:
+        return Limbs(w.lo & jnp.int32((1 << bits) - 1),
+                     jnp.zeros_like(w.hi))
+    if bits == 32:
+        return Limbs(w.lo, jnp.zeros_like(w.hi))
+    if bits < 64:
+        return Limbs(w.lo, w.hi & jnp.int32((1 << (bits - 32)) - 1))
+    return w
+
+
+def field(w: Limbs, lsb: int, bits: int) -> Limbs:
+    """Extract the ``bits``-wide field at bit offset ``lsb``."""
+    return mod_pow2(shift_right_logical(w, lsb), bits)
+
+
+def bit_or(a: Limbs, b: Limbs) -> Limbs:
+    return Limbs(a.lo | b.lo, a.hi | b.hi)
+
+
+def stack_planes(w: Limbs) -> jnp.ndarray:
+    """Limbs -> one int32 array with a leading (2,) plane axis:
+    ``planes[0] = lo``, ``planes[1] = hi`` — the transport layout for
+    kernel operands and VMEM scratch."""
+    return jnp.stack([w.lo, w.hi])
+
+
+def from_planes(arr: jnp.ndarray) -> Limbs:
+    return Limbs(arr[0], arr[1])
+
+
+# ---------------------------------------------------------------------------
+# test oracles (need jax_enable_x64; never used by an execution path)
+# ---------------------------------------------------------------------------
+
+def to_int64(w: Limbs) -> jnp.ndarray:
+    """Reassemble the int64 value (two's complement).  Oracle only."""
+    lo_u = w.lo.astype(jnp.int64) & jnp.int64(0xFFFFFFFF)
+    return (w.hi.astype(jnp.int64) << 32) | lo_u
+
+
+def from_int64(v: jnp.ndarray) -> Limbs:
+    """Split an int64 value into limbs.  Oracle only."""
+    v = v.astype(jnp.int64)
+    lo = (v & jnp.int64(0xFFFFFFFF)).astype(jnp.uint32).astype(I32)
+    hi = ((v >> 32) & jnp.int64(0xFFFFFFFF)).astype(jnp.uint32) \
+        .astype(I32)
+    return Limbs(lo, hi)

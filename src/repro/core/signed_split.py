@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from . import limbs
+
 
 def require_dtype(dtype) -> jnp.dtype:
     """Raise if JAX would silently canonicalize ``dtype`` away
@@ -76,3 +78,46 @@ def pack_unsigned(values: jnp.ndarray, width: int, lane: int, dtype):
 
 def pack(values: jnp.ndarray, width: int, lane: int, dtype, *, signed: bool):
     return (pack_signed if signed else pack_unsigned)(values, width, lane, dtype)
+
+
+# ---------------------------------------------------------------------------
+# two-limb packing (33..64-bit DSP words on the int32 datapath)
+# ---------------------------------------------------------------------------
+
+def pack_signed_limbs(values: jnp.ndarray, width: int, lane: int) -> limbs.Limbs:
+    """Pre-adder packing into a two-limb int32 word (no int64, no
+    ``jax_enable_x64``): same D - A construction as ``pack_signed``,
+    but D and A accumulate in the mod-2^64 limb domain so lane offsets
+    past bit 31 land in the hi limb with carry propagation."""
+    n = values.shape[-1]
+    r, s = split_signed(values.astype(jnp.int32), width)
+    d_word = limbs.zeros(values.shape[:-1])
+    a_word = limbs.zeros(values.shape[:-1])
+    for i in range(n):
+        d_word = limbs.add(d_word,
+                           limbs.shift_left(limbs.from_u32(r[..., i]),
+                                            i * lane))
+        a_word = limbs.add(a_word,
+                           limbs.shift_left(limbs.from_u32(s[..., i]),
+                                            i * lane + width - 1))
+    return limbs.sub(d_word, a_word)     # the pre-adder subtraction
+
+
+def pack_unsigned_limbs(values: jnp.ndarray, width: int,
+                        lane: int) -> limbs.Limbs:
+    """Plain concatenation packing into a two-limb int32 word."""
+    del width
+    n = values.shape[-1]
+    word = limbs.zeros(values.shape[:-1])
+    for i in range(n):
+        word = limbs.add(word,
+                         limbs.shift_left(
+                             limbs.from_u32(values[..., i].astype(jnp.int32)),
+                             i * lane))
+    return word
+
+
+def pack_limbs(values: jnp.ndarray, width: int, lane: int, *,
+               signed: bool) -> limbs.Limbs:
+    return (pack_signed_limbs if signed else pack_unsigned_limbs)(
+        values, width, lane)

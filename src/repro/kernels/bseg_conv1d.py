@@ -35,10 +35,25 @@ def _body(plan: BSEGPlan, n_groups: int, n_steps: int, s_out: int,
     ws = bseg_common.word_spec(plan)
 
     buf_ref[...] = jnp.zeros_like(buf_ref)
-    carry_ref[...] = jnp.full(carry_ref.shape, ws.const(ws.bias_full))
+    # carry scratch holds one word per (group, channel); on a 2-limb
+    # spec the scratch has a leading (2,) limb-plane axis
+    init_shape = carry_ref.shape[1:] if ws.limbs == 2 else carry_ref.shape
+    carry_ref[...] = ws.w_to_planes(ws.w_full(init_shape, ws.bias_full))
+
+    def read_carry(g):
+        if ws.limbs == 2:
+            return bseg_common.Limbs(carry_ref[0, g], carry_ref[1, g])
+        return carry_ref[g]
+
+    def write_carry(g, word):
+        if ws.limbs == 2:
+            carry_ref[0, g] = word.lo
+            carry_ref[1, g] = word.hi
+        else:
+            carry_ref[g] = word
 
     xb = x_ref[0]                                # [s_pad, bc] int8 unsigned
-    kap = kap_ref[...]                           # [n_groups, bc] word dtype
+    kap = ws.w_from_planes(kap_ref[...])         # [n_groups, bc] word domain
 
     def step(t, _):
         tau = t * n_i
@@ -47,10 +62,12 @@ def _body(plan: BSEGPlan, n_groups: int, n_steps: int, s_out: int,
             rows = jax.lax.dynamic_slice_in_dim(
                 xb, tau + g * n_k, n_i, axis=0)            # [n_i, bc]
             iota = bseg_common.pack_iota(rows, plan, axis=0)
-            word = kap[g] * iota + carry_ref[g]  # wide MAC + C port
+            kap_g = ws.w_map(kap, lambda a: a[g])
+            # wide MAC + C port
+            word = ws.w_add(ws.w_mul(kap_g, iota), read_carry(g))
             # emit completed lanes + slice carried lanes (Fig. 7)
             lanes, c_next = bseg_common.split_word(word, plan)
-            carry_ref[g] = c_next
+            write_carry(g, c_next)
             upd = upd + jnp.stack(lanes, axis=0)
         prev = jax.lax.dynamic_slice_in_dim(buf_ref[...], tau, n_lanes,
                                             axis=0)
@@ -74,18 +91,21 @@ def bseg_conv1d(x_pad: jnp.ndarray, kappa: jnp.ndarray, *, plan: BSEGPlan,
       x_pad: [B, S_pad, C] int8, unsigned values in [0, 2^w_i), already
         left-padded with n-1 zeros (plus any alignment padding at the
         right end — see ops.prepare for the exact amount).
-      kappa: [G, C] packed kernel factors in the plan's word dtype
-        (``bseg_common.word_dtype``; one per tap group, pre-adder
-        applied at weight-prep time).
-      plan: BSEG plan on any supported datapath (int32 / fp32 / int64
-        word representation — see ``bseg_common.WordSpec``).
+      kappa: [G, C] packed kernel factors in the plan's transport
+        layout (``bseg_common.word_dtype``; one per tap group,
+        pre-adder applied at weight-prep time).  Wide (2-limb) plans
+        carry a leading (2,) limb-plane axis: [2, G, C] int32.
+      plan: BSEG plan on any supported datapath (1-limb int32 / fp32,
+        or 2-limb int32 for the wide DSP words — see
+        ``bseg_common.WordSpec``).
       s_out: number of output samples.
 
     Returns:
       [B, S_out, C] int32 — exact correlation totals (bias removed).
     """
+    ws = bseg_common.word_spec(plan)
     b, s_pad, c = x_pad.shape
-    n_groups = kappa.shape[0]
+    n_groups = kappa.shape[1] if ws.limbs == 2 else kappa.shape[0]
     n_i, n_k = plan.n_i, plan.n_k
     n_steps = -(-(s_out + n_k - 1) // n_i)
     need = (n_steps - 1) * n_i + (n_groups - 1) * n_k + n_i
@@ -94,18 +114,23 @@ def bseg_conv1d(x_pad: jnp.ndarray, kappa: jnp.ndarray, *, plan: BSEGPlan,
     assert c % bc == 0
     buf_len = n_steps * n_i + plan.n_lanes + 8
     grid = (b, c // bc)
+    if ws.limbs == 2:
+        kap_spec = pl.BlockSpec((2, n_groups, bc),
+                                lambda ib, ic: (0, 0, ic))
+    else:
+        kap_spec = pl.BlockSpec((n_groups, bc), lambda ib, ic: (0, ic))
     return pl.pallas_call(
         functools.partial(_body, plan, n_groups, n_steps, s_out),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, s_pad, bc), lambda ib, ic: (ib, 0, ic)),
-            pl.BlockSpec((n_groups, bc), lambda ib, ic: (0, ic)),
+            kap_spec,
         ],
         out_specs=pl.BlockSpec((1, s_out, bc), lambda ib, ic: (ib, 0, ic)),
         out_shape=jax.ShapeDtypeStruct((b, s_out, c), jnp.int32),
         scratch_shapes=[
             pltpu.VMEM((buf_len, bc), jnp.int32),
-            pltpu.VMEM((n_groups, bc), bseg_common.word_dtype(plan)),
+            pltpu.VMEM(ws.plane_shape((n_groups, bc)), ws.dtype),
         ],
         interpret=interpret,
     )(x_pad, kappa)

@@ -11,9 +11,10 @@ Mapping (Figs. 6/7):
   * every kernel row r of every input channel ci is a 1-D BSEG row
     conv: kw taps packed (reversed, pre-adder) into ceil(kw/n_k) tap
     groups, n_i input samples packed per step — one wide multiply (in
-    the plan's word representation: int32 for the INT32 lane, float32
-    for FP32M, int64 for the DSP48E2/DSP58 emulation words — see
-    ``bseg_common.WordSpec``) performs n_k * n_i MACs;
+    the plan's word representation: one int32 limb for the INT32 lane,
+    float32 for FP32M, two carry-propagating int32 limbs for the wide
+    DSP48E2/DSP58 words — see ``bseg_common.WordSpec``) performs
+    n_k * n_i MACs;
   * the (r, ci) pipelines are *fused into one vectorized axis* of size
     kh * C_in: their wide words advance in lock-step through the Fig. 6
     schedule, each with its own packed-partial carry word (the DSP
@@ -60,7 +61,7 @@ def _body(plan: BSEGPlan, n_groups: int, kh: int, n_steps: int,
 
     xb = x_ref[0]                          # [H_pad, W_pad, C_in] int8
     c_in = xb.shape[2]
-    bco = kap_ref.shape[3]
+    bco = o_ref.shape[3]
     khc = kh * c_in
     row0 = pl.program_id(1) * bh
 
@@ -69,17 +70,21 @@ def _body(plan: BSEGPlan, n_groups: int, kh: int, n_steps: int,
     xf = jnp.concatenate(
         [jax.lax.dynamic_slice_in_dim(xb, row0 + r, bh, axis=0)
          for r in range(kh)], axis=2)      # [bh, W_pad, kh*C_in]
-    kap = kap_ref[...].reshape(n_groups, khc, bco)
+    kap = ws.w_map(ws.w_from_planes(kap_ref[...]),
+                   lambda a: a.reshape(n_groups, khc, bco))
 
     for g in range(n_groups):
-        kap_g = kap[g]                     # [khc, bco]
+        kap_g = ws.w_map(kap, lambda a, g=g: a[g])     # [khc, bco]
 
         def step(t, carry, g=g, kap_g=kap_g):
             tau = t * n_i
             seg = jax.lax.dynamic_slice_in_dim(
                 xf, tau + g * n_k, n_i, axis=1)        # [bh, n_i, khc]
             iota = bseg_common.pack_iota(seg, plan, axis=1)  # [bh, khc]
-            word = kap_g[None] * iota[..., None] + carry   # [bh, khc, bco]
+            word = ws.w_add(                           # [bh, khc, bco]
+                ws.w_mul(ws.w_map(kap_g, lambda a: a[None]),
+                         ws.w_map(iota, lambda a: a[..., None])),
+                carry)
             # Fig. 7 slicing per pipeline, THEN the adder tree over (r, ci)
             lanes, c_next = bseg_common.split_word(word, plan)
             upd = jnp.stack([l.sum(axis=1, dtype=jnp.int32) for l in lanes],
@@ -90,7 +95,9 @@ def _body(plan: BSEGPlan, n_groups: int, kh: int, n_steps: int,
                 buf_ref[...], prev + upd, (0, tau, 0))
             return c_next
 
-        carry0 = jnp.full((bh, khc, bco), ws.const(ws.bias_full))
+        # the carry word is a fori_loop carry: a jnp array, or a Limbs
+        # pytree on the 2-limb specs
+        carry0 = ws.w_full((bh, khc, bco), ws.bias_full)
         jax.lax.fori_loop(0, n_steps, step, carry0)
 
     # buffer index = output column + n_k - 1
@@ -111,10 +118,13 @@ def bseg_conv2d(x_pad: jnp.ndarray, kappa: jnp.ndarray, *, plan: BSEGPlan,
         and padded on W to cover the step schedule (see
         ``ops.packed_conv2d`` for the exact amount).
       kappa: [G, kh, C_in, C_out] packed kernel-row factors in the
-        plan's word dtype (``bseg_common.word_dtype``; one per tap
-        group, pre-adder applied at weight-prep time).
-      plan: BSEG plan on any supported datapath (int32 / fp32 / int64
-        word representation — see ``bseg_common.WordSpec``).
+        plan's transport layout (``bseg_common.word_dtype``; one per
+        tap group, pre-adder applied at weight-prep time).  Wide
+        (2-limb) plans carry a leading (2,) limb-plane axis:
+        [2, G, kh, C_in, C_out] int32.
+      plan: BSEG plan on any supported datapath (1-limb int32 / fp32,
+        or 2-limb int32 for the wide DSP words — see
+        ``bseg_common.WordSpec``).
       h_out / w_out: output frame size.
       bh / bco: output-row / output-channel block sizes (must divide
         h_out / C_out; the ops wrapper downgrades them if not).
@@ -124,8 +134,13 @@ def bseg_conv2d(x_pad: jnp.ndarray, kappa: jnp.ndarray, *, plan: BSEGPlan,
       over kernel rows and input channels (guard bias removed; any
       zero-point correction happens in the ops wrapper).
     """
+    ws = bseg_common.word_spec(plan)
     b, h_pad, w_pad, c_in = x_pad.shape
-    n_groups, kh, kc, c_out = kappa.shape
+    if ws.limbs == 2:
+        two, n_groups, kh, kc, c_out = kappa.shape
+        assert two == 2, kappa.shape
+    else:
+        n_groups, kh, kc, c_out = kappa.shape
     assert kc == c_in, (kc, c_in)
     assert h_pad >= h_out + kh - 1, (h_pad, h_out, kh)
     n_k, n_i = plan.n_k, plan.n_i
@@ -137,14 +152,19 @@ def bseg_conv2d(x_pad: jnp.ndarray, kappa: jnp.ndarray, *, plan: BSEGPlan,
     assert h_out % bh == 0 and c_out % bco == 0, (h_out, bh, c_out, bco)
     buf_len = n_steps * n_i + plan.n_lanes + 8
     grid = (b, h_out // bh, c_out // bco)
+    if ws.limbs == 2:
+        kap_spec = pl.BlockSpec((2, n_groups, kh, c_in, bco),
+                                lambda ib, ih, ic: (0, 0, 0, 0, ic))
+    else:
+        kap_spec = pl.BlockSpec((n_groups, kh, c_in, bco),
+                                lambda ib, ih, ic: (0, 0, 0, ic))
     return pl.pallas_call(
         functools.partial(_body, plan, n_groups, kh, n_steps, w_out, bh),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, h_pad, w_pad, c_in),
                          lambda ib, ih, ic: (ib, 0, 0, 0)),
-            pl.BlockSpec((n_groups, kh, c_in, bco),
-                         lambda ib, ih, ic: (0, 0, 0, ic)),
+            kap_spec,
         ],
         out_specs=pl.BlockSpec((1, bh, w_out, bco),
                                lambda ib, ih, ic: (ib, ih, 0, ic)),

@@ -11,14 +11,14 @@ Dispatch table for ``packed_matmul`` (mode -> kernel -> constraints):
   mode           kernel                      weight format      constraints
   -------------  --------------------------  -----------------  ------------------------------
   sdv_matmul     kernels/sdv_matmul (GEMM,   SDV storage words  integer x; ``plan`` given;
-                 grid R/br x G/bg x K/bk)    [K, G] int32 or    ``plan.spec.exact_wrap``; the
-                                             int64 (wide        int64 emulation words need
-                                             DSP48E2/DSP58      x64 + CPU interpret (like the
-                                             emulation words)   BSEG conv kernels);
-                                                                rows > GEMV_MAX_ROWS in auto
+                 grid R/br x G/bg x K/bk)    [K, G] int32, or   ``plan.spec.exact_wrap``;
+                                             [2, K, G] limb     rows > GEMV_MAX_ROWS in auto
+                                             planes (wide
+                                             DSP48E2/DSP58
+                                             words)
   sdv_matvec     kernels/sdv_matvec (GEMV,   SDV storage words  integer x; ``plan`` given;
-                 grid B/bb x G/bg x K/bk)    [K, G] int32/64    same word gates as sdv_matmul;
-                                                                signed-element storage only;
+                 grid B/bb x G/bg x K/bk)    [K, G] int32 /     same word gates as sdv_matmul;
+                                             [2, K, G] planes   signed-element storage only;
                                                                 rows <= GEMV_MAX_ROWS in auto
   quant_matmul   kernels/quant_matmul        lane words         float x; no ``plan`` (memory
                  (memory-packed, dequant     [K, N/(32/w)]      packing only); ``scale`` and
@@ -28,9 +28,8 @@ Dispatch table for ``packed_matmul`` (mode -> kernel -> constraints):
                                                                 False, the datapath is not
                                                                 exact-wrap (fp32m rounds, so
                                                                 SDV spill tracking is invalid),
-                                                                or the int64 emulation words
-                                                                cannot run (x64 off or a
-                                                                compiled TPU backend)
+                                                                or a hand-built plan's layout
+                                                                overruns its own storage word
 
 ``mode="auto"`` picks the first row that satisfies its constraints, in
 the order ref-conditions -> sdv_matvec/sdv_matmul (by batch rows) ->
@@ -46,11 +45,11 @@ Dispatch table for ``packed_conv2d`` (mode -> kernel -> constraints):
   -------------  --------------------------  ------------------------------
   bseg_conv2d    kernels/bseg_conv2d         integer x; BSEG ``plan`` on
                  (cross-channel batched      any datapath — the kernel
-                 conv2d, grid B x H/bh x     body is word-generic (int32 /
-                 C_out/bco, fused (kh,C_in)  fp32 / int64 per
-                 pipeline axis, VMEM row     ``bseg_common.WordSpec``; the
-                 accumulator)                int64 emulation words need
-                                             jax_enable_x64 + interpret);
+                 conv2d, grid B x H/bh x     body is word-generic (1-limb
+                 C_out/bco, fused (kh,C_in)  int32 / fp32, or 2-limb int32
+                 pipeline axis, VMEM row     for the wide DSP48E2/DSP58
+                 accumulator)                words, per
+                                             ``bseg_common.WordSpec``);
                                              stride 1, 'same' pad: odd kh
                                              and kw; ``plan.w_i <= 7``
   bseg_conv1d    kernels/bseg_conv1d         depthwise shape only
@@ -59,25 +58,25 @@ Dispatch table for ``packed_conv2d`` (mode -> kernel -> constraints):
                                              constraints
   im2col         kernels/sdv_matmul via      integer x; patches unfolded
                  ``packed_matmul`` (SDV      in jnp, compute on the SDV
-                 plan derived from the       datapath (int32 exact-wrap
-                 BSEG widths: signed         words only); odd kh and kw
+                 plan derived from the       datapath (exact-wrap words
+                 BSEG widths: signed         only); odd kh and kw
                  w_i+1-bit activations —
                  or a planner-chosen
                  ``sdv_plan`` override)
   ref            pure jnp integer conv       always available; selected
                  (XLA owns the fusion)       in auto when ``use_kernel``
-                                             is False, the int64 emulation
-                                             words cannot run (x64 off or
-                                             a compiled TPU backend), or
+                                             is False, a hand-built
+                                             plan's accumulation overruns
+                                             the storage word, or
                                              ``plan.w_i > 7`` (the
                                              kernels stage activations
                                              in int8)
 
 ``mode="auto"`` routes ref-conditions -> bseg_conv1d (depthwise shape)
--> im2col (1x1 kernels on int32-word datapaths — a conv with no
+-> im2col (1x1 kernels on single-limb-word datapaths — a conv with no
 spatial reuse is a GEMM) -> bseg_conv2d (everything else, including
-1x1 on fp32m / dsp48e2 / dsp58 words, whose SDV storage would not be
-int32).
+1x1 on fp32m / dsp48e2 / dsp58 words, whose derived SDV GEMM would
+need the wider storage layout).
 """
 from __future__ import annotations
 
@@ -88,6 +87,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bseg as core_bseg
+from repro.core import limbs as limb_ops
 from repro.core import signed_split
 from repro.core.datapath import BSEGPlan, SDVPlan
 from . import bseg_common
@@ -145,10 +145,11 @@ def quant_matmul(x: jnp.ndarray, w_packed: jnp.ndarray, scale: jnp.ndarray,
 
 def prepare_sdv_weights(w_int: jnp.ndarray, plan: SDVPlan) -> jnp.ndarray:
     """[M, K] ints (w_a-bit, signedness per ``plan.signed_a``) -> [K, G]
-    storage words in the plan's word dtype
-    (``bseg_common.sdv_word_spec``) — int32 for plans whose layout fits
-    32 bits, int64 for the wide DSP48E2/DSP58 emulation words (packing
-    them into int32 would silently drop the high fields).
+    storage words in the plan's transport layout
+    (``bseg_common.sdv_word_spec``) — one int32 array for plans whose
+    layout fits 32 bits, two int32 limb planes ([2, K, G]) for the wide
+    DSP48E2/DSP58 words (fields past bit 31 live in the hi limb; no
+    int64, no ``jax_enable_x64``).
 
     Signed layout: sign-sliced remainder fields (D) in the low
     ``plan.packed_width`` bits, the n sign bits parked above — the two
@@ -158,10 +159,29 @@ def prepare_sdv_weights(w_int: jnp.ndarray, plan: SDVPlan) -> jnp.ndarray:
     m, k = w_int.shape
     n = plan.n
     g = -(-m // n)
-    wdt = bseg_common.sdv_word_spec(plan).dtype
-    if wdt == jnp.int64:
-        signed_split.require_dtype(jnp.int64)
+    ws = bseg_common.sdv_word_spec(plan)
     wp = jnp.pad(w_int, ((0, g * n - m), (0, 0))).reshape(g, n, k)
+    if ws.limbs == 2:
+        wp32 = wp.astype(jnp.int32)
+        if plan.signed_a:
+            # SDV storage is the D word (sign-sliced remainders in
+            # their lanes) with the raw sign bits parked above the
+            # packed field — NOT the pre-adder difference, which the
+            # kernel materializes per step.
+            r, s = signed_split.split_signed(wp32, plan.w_a)
+            word = signed_split.pack_unsigned_limbs(
+                jnp.moveaxis(r, 1, -1), plan.w_a, plan.lane)  # [G, K]
+            for i in range(n):
+                word = limb_ops.bit_or(
+                    word,
+                    limb_ops.shift_left(limb_ops.from_u32(s[:, i, :]),
+                                        plan.packed_width + i))
+        else:
+            word = signed_split.pack_unsigned_limbs(
+                jnp.moveaxis(wp32, 1, -1), plan.w_a, plan.lane)
+        planes = limb_ops.stack_planes(word)                 # [2, G, K]
+        return jnp.swapaxes(planes, 1, 2)                    # [2, K, G]
+    wdt = ws.dtype
     word = jnp.zeros((g, k), wdt)
     if plan.signed_a:
         r, s = signed_split.split_signed(wp.astype(wdt), plan.w_a)
@@ -213,32 +233,23 @@ _PACKED_MODES = ("auto", "sdv_matmul", "sdv_matvec", "quant_matmul", "ref")
 
 
 def _matmul_word_gate(plan: SDVPlan) -> Optional[str]:
-    """Why the SDV GEMM/GEMV kernels cannot represent this plan's word
-    on the current backend, or ``None`` when they can.
+    """Why the SDV GEMM/GEMV kernels cannot represent this plan's word,
+    or ``None`` when they can.
 
-    The kernels are word-generic (``bseg_common.sdv_word_spec``): int32
-    for layouts that fit the 32-bit TPU lane, int64 for the
-    DSP48E2/DSP58 emulation words.  The int64 representation needs
-    ``jax_enable_x64`` and a CPU interpret backend (the TPU vector
-    unit has no 64-bit path) — the same gate as the BSEG conv
-    kernels.  A hand-built plan whose storage layout (packed field +
-    parked sign bits) overruns the word is rejected here too, so it
-    degrades to ref / raises instead of tripping a kernel assert.
+    The kernels are word-generic (``bseg_common.sdv_word_spec``): one
+    int32 limb for layouts that fit the 32-bit TPU lane, two
+    carry-propagating int32 limbs for the wide DSP48E2/DSP58 words —
+    both compile on any backend with int32, so datapath width no
+    longer gates the route.  The only remaining word gate: a
+    hand-built plan whose storage layout (packed field + parked sign
+    bits) overruns its own datapath word is rejected, so it degrades
+    to lossless ref / raises instead of tripping a kernel assert.
     """
     layout_bits = bseg_common.sdv_layout_bits(plan)
     if layout_bits > plan.spec.w_word:
         return (f"plan overruns the {plan.spec.name} storage word: "
                 f"packed field + parked sign bits = {layout_bits} bits "
                 f"> w_word={plan.spec.w_word}")
-    if plan.spec.w_word > 32 or layout_bits > 32:
-        if not _on_cpu():
-            return (f"datapath {plan.spec.name}: the int64 emulation "
-                    "words run interpret-only (no 64-bit vector path "
-                    "on this backend)")
-        if not jax.config.jax_enable_x64:
-            return (f"datapath {plan.spec.name} needs "
-                    f"{plan.spec.w_word}-bit words: enable "
-                    "jax_enable_x64 for the int64-emulation kernels")
     return None
 
 
@@ -358,7 +369,7 @@ def packed_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
             f"route {route!r} needs integer activations within "
             f"plan.w_b={plan.w_b} bits, got {x.dtype}")
 
-    g = w.shape[1]
+    g = w.shape[-1]
     m = g * plan.n if m is None else m
     if route == "ref":
         w_int = ref.sdv_unpack_words_ref(w, plan=plan)       # [K, M_pad]
@@ -387,8 +398,12 @@ def packed_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
 # ---------------------------------------------------------------------------
 
 def prepare_bseg_taps(taps: jnp.ndarray, plan: BSEGPlan):
-    """[C, n] signed taps -> ([G, C] packed factors in the plan's word
-    dtype, [C] tap sums).
+    """[C, n] signed taps -> (packed factors in the plan's transport
+    layout, [C] tap sums).
+
+    Single-limb plans store [G, C] words in the plan's word dtype; wide
+    (2-limb) plans store [2, G, C] int32 limb planes
+    (``core.limbs``) — no int64, no ``jax_enable_x64``.
 
     Tap groups are packed reversed through the pre-adder; the tap sums
     feed the zero-point correction.
@@ -396,12 +411,18 @@ def prepare_bseg_taps(taps: jnp.ndarray, plan: BSEGPlan):
     c, n = taps.shape
     groups = -(-n // plan.n_k)
     tp = jnp.pad(taps, ((0, 0), (0, groups * plan.n_k - n)))
+    ws = bseg_common.word_spec(plan)
     kappas = []
     for gi in range(groups):
         seg = tp[:, gi * plan.n_k:(gi + 1) * plan.n_k]
-        kappas.append(core_bseg.bseg_pack_kernel(seg, plan))
-    kappa = jnp.stack(kappas, axis=0) \
-        .astype(bseg_common.word_dtype(plan))                # [G, C]
+        if ws.limbs == 2:
+            word = signed_split.pack_signed_limbs(
+                seg[:, ::-1].astype(jnp.int32), plan.w_k, plan.lane)
+            kappas.append(limb_ops.stack_planes(word))       # [2, C]
+        else:
+            kappas.append(core_bseg.bseg_pack_kernel(seg, plan)
+                          .astype(ws.dtype))
+    kappa = jnp.stack(kappas, axis=1 if ws.limbs == 2 else 0)
     return kappa, jnp.sum(taps.astype(jnp.int32), axis=-1)
 
 
@@ -417,7 +438,8 @@ def bseg_conv1d(x_q: jnp.ndarray, kappa: jnp.ndarray, tap_sum: jnp.ndarray,
     """
     b, s, c = x_q.shape
     n = n_taps
-    n_groups = kappa.shape[0]
+    ws = bseg_common.word_spec(plan)
+    n_groups = kappa.shape[1] if ws.limbs == 2 else kappa.shape[0]
     if padding not in ("causal", "same"):
         raise ValueError(f"unknown padding {padding!r}")
     left = n - 1 if padding == "causal" else (n - 1) // 2
@@ -448,46 +470,44 @@ _CONV_MODES = ("auto", "bseg_conv2d", "bseg_conv1d", "im2col", "ref")
 
 
 def _conv_word_gate(plan: BSEGPlan) -> Optional[str]:
-    """Why the BSEG conv kernels cannot represent this plan's word on
-    the current backend, or ``None`` when they can.
+    """Why the BSEG conv kernels cannot represent this plan's word, or
+    ``None`` when they can.
 
-    The kernels are datapath-generic (``bseg_common.WordSpec``): int32
-    for the INT32 lane, float32 for FP32M (guard-bit dimensioning keeps
-    every intermediate exact), int64 for the DSP48E2/DSP58 emulation
-    words.  The int64 representation needs ``jax_enable_x64`` and a
-    CPU interpret backend (the TPU vector unit has no 64-bit path).
-    A hand-built plan whose biased accumulation word overruns the
-    accumulator (``plan_bseg`` refuses to dimension these) is rejected
-    here too, so it degrades to ref / raises instead of tripping a
-    kernel-internal assert.
+    The kernels are datapath-generic (``bseg_common.WordSpec``): one
+    int32 limb for the INT32 lane, float32 for FP32M (guard-bit
+    dimensioning keeps every intermediate exact), two carry-propagating
+    int32 limbs for the wide DSP48E2/DSP58 words — so every planner
+    plan compiles on any backend with int32 (no ``jax_enable_x64``, no
+    interpret-only gate).  The only remaining gate is a hand-built plan
+    whose biased accumulation word overruns the accumulator
+    (``plan_bseg`` refuses to dimension these): it is rejected here so
+    it degrades to ref / raises instead of tripping a kernel-internal
+    assert.
     """
     if plan.n_lanes * plan.lane > plan.spec.w_word:
         return (f"plan overruns the {plan.spec.name} accumulator word: "
                 f"{plan.n_lanes} lanes x L={plan.lane} > "
                 f"w_word={plan.spec.w_word} (the top lane's guard bias "
                 "falls off the word)")
-    if plan.spec.w_word > 32:
-        if not _on_cpu():
-            return (f"datapath {plan.spec.name}: the int64 emulation "
-                    "words run interpret-only (no 64-bit vector path "
-                    "on this backend)")
-        if not jax.config.jax_enable_x64:
-            return (f"datapath {plan.spec.name} needs "
-                    f"{plan.spec.w_word}-bit words: enable "
-                    "jax_enable_x64 for the int64-emulation kernels")
     return None
 
 
 def _sdv_words_int32(spec) -> bool:
-    """True when the SDV GEMM kernels can store this datapath's words
-    (int32 exact-wrap) — the im2col route's compute constraint."""
+    """True when the SDV GEMM stores this datapath's words in a single
+    int32 limb — the *auto* route's preference for the im2col GEMM.
+    2-limb SDV words compile too (explicit ``mode="im2col"`` takes
+    them), but the BSEG kernels run wide words with fewer limb ops per
+    MAC, so auto keeps 1x1 convs on the BSEG datapath there."""
     return spec.exact_wrap and spec.w_word <= 32
 
 
 def prepare_bseg_conv2d(w_int: jnp.ndarray, plan: BSEGPlan):
-    """[C_out, C_in, kh, kw] signed taps -> ([G, kh, C_in, C_out]
-    packed kernel-row factors in the plan's word dtype, [C_out] tap
-    sums).
+    """[C_out, C_in, kh, kw] signed taps -> (packed kernel-row factors
+    in the plan's transport layout, [C_out] tap sums).
+
+    Single-limb plans store [G, kh, C_in, C_out] words in the plan's
+    word dtype; wide (2-limb) plans store [2, G, kh, C_in, C_out]
+    int32 limb planes (``core.limbs``).
 
     Each kernel row of each (C_out, C_in) pair packs its kw taps into
     ceil(kw/n_k) groups, reversed through the pre-adder; the tap sums
@@ -497,13 +517,23 @@ def prepare_bseg_conv2d(w_int: jnp.ndarray, plan: BSEGPlan):
     groups = -(-kw // plan.n_k)
     wp = jnp.pad(w_int, ((0, 0), (0, 0), (0, 0),
                          (0, groups * plan.n_k - kw)))
+    ws = bseg_common.word_spec(plan)
     kappas = []
     for gi in range(groups):
         seg = wp[..., gi * plan.n_k:(gi + 1) * plan.n_k]
-        kappas.append(core_bseg.bseg_pack_kernel(seg, plan))
-    kappa = jnp.stack(kappas, axis=0) \
-        .astype(bseg_common.word_dtype(plan))            # [G, C_out, C_in, kh]
-    kappa = jnp.transpose(kappa, (0, 3, 2, 1))           # [G, kh, C_in, C_out]
+        if ws.limbs == 2:
+            word = signed_split.pack_signed_limbs(
+                seg[..., ::-1].astype(jnp.int32), plan.w_k, plan.lane)
+            kappas.append(limb_ops.stack_planes(word))  # [2, C_out, C_in, kh]
+        else:
+            kappas.append(core_bseg.bseg_pack_kernel(seg, plan)
+                          .astype(ws.dtype))
+    if ws.limbs == 2:
+        kappa = jnp.stack(kappas, axis=1)        # [2, G, C_out, C_in, kh]
+        kappa = jnp.transpose(kappa, (0, 1, 4, 3, 2))
+    else:
+        kappa = jnp.stack(kappas, axis=0)        # [G, C_out, C_in, kh]
+        kappa = jnp.transpose(kappa, (0, 3, 2, 1))
     tap_sum = jnp.sum(w_int.astype(jnp.int32), axis=(1, 2, 3))
     return kappa, tap_sum
 
@@ -540,12 +570,6 @@ def select_conv_route(x_shape, w_shape, *, plan: BSEGPlan,
                     "mode 'im2col' computes on the SDV datapath, which "
                     f"needs exact-wrap arithmetic; {plan.spec.name} "
                     "rounds (fp32) — use the bseg kernels instead")
-            if plan.spec.w_word > 32:
-                raise ValueError(
-                    "mode 'im2col' stores int32 SDV words; the "
-                    f"{plan.spec.name} datapath needs "
-                    f"{plan.spec.w_word}-bit words — use the bseg "
-                    "kernels instead")
         else:
             gate = _conv_word_gate(plan)
             if gate is not None:
@@ -587,9 +611,9 @@ def select_conv_route(x_shape, w_shape, *, plan: BSEGPlan,
             return _r("im2col", "1x1 kernel: no spatial reuse -> GEMM "
                                 "on the SDV datapath")
         return _r("bseg_conv2d",
-                  f"1x1 kernel on the {plan.spec.name} word: the SDV "
-                  "GEMM stores int32 words, the BSEG kernel runs the "
-                  "word natively")
+                  f"1x1 kernel on the wide {plan.spec.name} word: the "
+                  "2-limb SDV GEMM pays extra limb ops per MAC, the "
+                  "BSEG kernel runs the wide word natively")
     return _r("bseg_conv2d",
               f"dense kxk conv on the {plan.spec.name} word: one "
               "cross-channel kernel launch")
@@ -652,7 +676,8 @@ def packed_conv2d(x: jnp.ndarray, w_int: jnp.ndarray, *, plan: BSEGPlan,
         activations are already unsigned, e.g. post-requantization).
       w_int: [C_out, C_in, kh, kw] signed taps within ``plan.w_k`` bits.
       plan: BSEG plan on any supported datapath (the kernels run the
-        word in its native representation — int32 / fp32 / int64).
+        word in its native representation — int32 / fp32 / two int32
+        limb planes for the wide DSP words).
       mode: a row of the dispatch table, or ``"auto"``.
       block_h / block_co: output-row / output-channel block sizes for
         the conv2d kernel (downgraded to H / C_out when not divisible).
@@ -704,7 +729,8 @@ def packed_conv2d(x: jnp.ndarray, w_int: jnp.ndarray, *, plan: BSEGPlan,
     # bseg_conv2d
     from . import bseg_conv2d as bseg2d_kernel
     kappa, tap_sum = prepare_bseg_conv2d(w_int, plan)
-    n_groups = kappa.shape[0]
+    ws = bseg_common.word_spec(plan)
+    n_groups = kappa.shape[1] if ws.limbs == 2 else kappa.shape[0]
     n_steps = -(-(w + plan.n_k - 1) // plan.n_i)
     need = (n_steps - 1) * plan.n_i + (n_groups - 1) * plan.n_k + plan.n_i
     pad_h, pad_w = kh // 2, kw // 2
@@ -731,21 +757,40 @@ def packed_conv2d(x: jnp.ndarray, w_int: jnp.ndarray, *, plan: BSEGPlan,
 
 def _unpack_bseg_taps(kappa: jnp.ndarray, plan: BSEGPlan,
                       n_taps: int) -> jnp.ndarray:
-    """Recover [C, n] signed taps from packed factors (test/fallback)."""
-    groups = kappa.shape[0]
+    """Recover [C, n] signed taps from packed factors (test/fallback).
+
+    Accepts either transport layout: [G, C] single words, or
+    [2, G, C] int32 limb planes for the wide (2-limb) plans.
+    """
+    ws = bseg_common.word_spec(plan)
+    groups = kappa.shape[1] if ws.limbs == 2 else kappa.shape[0]
     segs = []
     for gi in range(groups):
-        # fp32m factors are exact integers below 2^24: int32 decode
-        word = kappa[gi].astype(jnp.int64) if kappa.dtype == jnp.int64 \
-            else kappa[gi].astype(jnp.int32)
         vals = []
-        rem = word
-        # lanes hold the arithmetic sum; decode low-to-high with borrow
-        for i in range(plan.n_k):
-            f = (rem >> (i * plan.lane)) & ((1 << plan.lane) - 1)
-            v = jnp.where(f >= (1 << (plan.lane - 1)), f - (1 << plan.lane), f)
-            vals.append(v)
-            rem = rem - (v << (i * plan.lane))
+        if ws.limbs == 2:
+            rem = limb_ops.from_planes(kappa[:, gi])
+            # lanes hold the arithmetic sum; decode low-to-high with
+            # borrow, in the mod-2^64 limb domain
+            for i in range(plan.n_k):
+                f = limb_ops.field(rem, i * plan.lane, plan.lane)
+                sign = limb_ops.field(
+                    rem, i * plan.lane + plan.lane - 1, 1).lo
+                neg = limb_ops.sub(
+                    f, limb_ops.full(sign.shape, 1 << plan.lane))
+                v = jnp.where(sign == 1, neg.lo, f.lo)
+                vals.append(v)
+                rem = limb_ops.sub(rem, limb_ops.shift_left(
+                    limb_ops.from_i32(v), i * plan.lane))
+        else:
+            # fp32m factors are exact integers below 2^24: int32 decode
+            rem = kappa[gi].astype(jnp.int32)
+            # lanes hold the arithmetic sum; decode low-to-high with borrow
+            for i in range(plan.n_k):
+                f = (rem >> (i * plan.lane)) & ((1 << plan.lane) - 1)
+                v = jnp.where(f >= (1 << (plan.lane - 1)),
+                              f - (1 << plan.lane), f)
+                vals.append(v)
+                rem = rem - (v << (i * plan.lane))
         seg = jnp.stack(vals[::-1], axis=-1)                 # un-reverse
         segs.append(seg)
     taps = jnp.concatenate(segs, axis=-1)[:, :n_taps]

@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import limbs as limb_ops
+
 
 def unpack_words_ref(packed: jnp.ndarray, *, w: int) -> jnp.ndarray:
     per = 32 // w
@@ -56,7 +58,25 @@ def sdv_unpack_words_ref(w_words: jnp.ndarray, *, plan) -> jnp.ndarray:
     Signed layout: remainder fields in the low ``plan.packed_width``
     bits, sign bits parked above (value = r - 2^(w_a-1) s).  Unsigned
     layout: the lane fields are the values.
+
+    Wide (2-limb) transport layouts arrive as [2, K, G] int32 limb
+    planes; fields past bit 31 are extracted from the limb pair
+    (``core.limbs.field``).
     """
+    if w_words.ndim == 3:                 # [2, K, G] limb planes
+        word = limb_ops.from_planes(w_words)
+        k, g = w_words.shape[1:]
+        vals = []
+        for i in range(plan.n):
+            if plan.signed_a:
+                r_i = limb_ops.field(word, i * plan.lane,
+                                     plan.w_a - 1).lo
+                s_i = limb_ops.field(word, plan.packed_width + i, 1).lo
+                vals.append(r_i - (s_i << (plan.w_a - 1)))
+            else:
+                vals.append(limb_ops.field(word, i * plan.lane,
+                                           plan.w_a).lo)
+        return jnp.stack(vals, axis=-1).reshape(k, g * plan.n)
     k, g = w_words.shape
     vals = []
     for i in range(plan.n):

@@ -27,15 +27,17 @@ blocked at GEMM granularity (default 128) instead of the GEMV
 kernel's 8, and the activation block is row-major ``[br, bk]`` — no
 caller-side transpose.
 
-The body is *word-generic* (``bseg_common.sdv_word_spec``): int32 for
-plans whose storage layout fits the 32-bit TPU lane, int64 for the
-DSP48E2/DSP58 emulation words (48/58 bits live in a 64-bit integer;
-needs ``jax_enable_x64`` + a CPU interpret backend, exactly like the
-BSEG conv kernels' int64 path).  Every mask/shift below the datapath
-word width is value-preserving in either representation — int64 wrap
-at 2^64 and hardware wrap at 2^48 agree on all bits the Eq. 3
-extractor ever reads — so one body serves all exact-wrap datapaths.
-The spill totals and the lane outputs are tiny and stay int32.
+The body is *word-generic* (``bseg_common.sdv_word_spec``): one int32
+limb for plans whose storage layout fits the 32-bit TPU lane, two
+carry-propagating int32 limbs (``core.limbs``) for the wide
+DSP48E2/DSP58 words — the same hi/lo + carry trick the 48-bit DSP ALU
+plays, so every plan compiles on any backend with int32 (no
+``jax_enable_x64``, no interpret-only gate).  Every mask/shift below
+the datapath word width is value-preserving in either representation —
+mod-2^64 limb wrap and hardware wrap at 2^48 agree on all bits the
+Eq. 3 extractor ever reads — so one body serves all exact-wrap
+datapaths.  The spill totals and the lane outputs are tiny and stay
+int32.
 """
 from __future__ import annotations
 
@@ -46,13 +48,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import limbs as limb_ops
 from repro.core.datapath import SDVPlan
+from repro.core.limbs import Limbs
 from . import bseg_common
 
 
 def _lsb2(d_word, sign_bits, i: int, lane: int, w_a: int, signed_a: bool):
     """Two LSBs of element i (a_i & 3) from the stored fields."""
-    r2 = (d_word >> (i * lane)) & 3
+    if isinstance(d_word, Limbs):
+        r2 = limb_ops.field(d_word, i * lane, 2).lo
+    else:
+        r2 = (d_word >> (i * lane)) & 3
     if not signed_a or w_a >= 3:
         return r2                       # sign weight 2^(w_a-1) = 0 (mod 4)
     s = (sign_bits >> i) & 1
@@ -61,54 +68,68 @@ def _lsb2(d_word, sign_bits, i: int, lane: int, w_a: int, signed_a: bool):
 
 def _body(plan_n: int, lane: int, w_a: int, signed_a: bool, signed: bool,
           sign_shift: int, nsteps_k: int, bk: int, x_k_axis: int,
-          word_dtype_name: str,
+          ws: bseg_common.WordSpec,
           x_ref, w_ref, o_ref, word_ref, spill_ref):
     """Shared GEMM/GEMV kernel body.
 
     ``x_k_axis`` selects the activation block layout: 1 for the GEMM's
     row-major ``[rows, bk]`` block, 0 for the GEMV's K-major
     ``[bk, rows]`` block (``kernels/sdv_matvec`` reuses this body).
-    ``word_dtype_name`` is the storage-word representation
-    (``bseg_common.sdv_word_spec``): int32, or int64 for the wide
-    DSP48E2/DSP58 emulation words.
+    ``ws`` is the storage-word representation
+    (``bseg_common.sdv_word_spec``): one int32 limb, or two int32 limb
+    planes for the wide DSP48E2/DSP58 words (leading (2,) axis on the
+    storage operand and the accumulator scratch).
     """
     k_step = pl.program_id(2)
     n = plan_n
-    wdt = jnp.dtype(word_dtype_name)
+    two_limb = ws.limbs == 2
 
     @pl.when(k_step == 0)
     def _init():
         word_ref[...] = jnp.zeros_like(word_ref)
         spill_ref[...] = jnp.zeros_like(spill_ref)
 
-    xb = x_ref[...].astype(wdt)           # [rows, bk] or [bk, rows]
-    wbw = w_ref[...]                      # [bk, bg] storage words (wdt)
-    d_mask = (1 << sign_shift) - 1
+    # [rows, bk] or [bk, rows]; limb MACs lift int32 on the fly
+    xb = x_ref[...].astype(jnp.int32 if two_limb else ws.dtype)
+    wbw = ws.w_from_planes(w_ref[...])    # [bk, bg] storage words
+
+    def mask32(x, bits):
+        return x & ((1 << bits) - 1)
 
     def step(j, carry):
         word, spills = carry
         xk = jax.lax.dynamic_index_in_dim(xb, j, x_k_axis,
                                           keepdims=False)             # [rows]
-        stored = jax.lax.dynamic_index_in_dim(wbw, j, 0, keepdims=False)
-        d_word = stored & d_mask
+        stored = ws.w_map(wbw, lambda a: jax.lax.dynamic_index_in_dim(
+            a, j, 0, keepdims=False))
+        d_word = ws.mod_pow2(stored, sign_shift)
         if signed_a:
-            sign_bits = (stored >> sign_shift) & ((1 << n) - 1)
+            if two_limb:
+                sign_bits = limb_ops.field(stored, sign_shift, n).lo
+            else:
+                sign_bits = (stored >> sign_shift) & ((1 << n) - 1)
             # ---- the pre-adder: packed = D - A (Fig. 3) ----------------
-            a_word = jnp.zeros_like(d_word)
+            a_word = ws.w_full_like(d_word, 0)
             for i in range(n):
-                a_word += ((sign_bits >> i) & 1) << (i * lane + w_a - 1)
-            packed = d_word - a_word                                  # [bg]
+                bit = (sign_bits >> i) & 1
+                a_word = ws.w_add(
+                    a_word,
+                    ws.w_shift_left(ws.w_from_i32(bit, signed=False),
+                                    i * lane + w_a - 1))
+            packed = ws.w_sub(d_word, a_word)                         # [bg]
         else:
-            sign_bits = jnp.zeros_like(d_word)
+            sign_bits = jnp.zeros_like(ws.w_lo_i32(d_word))
             packed = d_word               # unsigned: plain concatenation
         # ---- wide MAC --------------------------------------------------
-        word2 = word + packed[None, :] * xk[:, None]                  # [br,bg]
+        word2 = ws.w_add(word, ws.w_mul(
+            ws.w_map(packed, lambda a: a[None, :]),
+            ws.w_from_i32(xk[:, None]) if two_limb else xk[:, None])) # [br,bg]
         # ---- mod-4 spill tracking (fractured-LUT reference) ------------
         x4 = (xk & 3)[:, None]                                        # [br,1]
         new_spills = []
         for i in range(1, n + 1):
-            prev = (word >> (i * lane)) & 3
-            obs = (word2 >> (i * lane)) & 3
+            prev = ws.w_lo_i32(ws.field(word, i * lane, 2))
+            obs = ws.w_lo_i32(ws.field(word2, i * lane, 2))
             if i < n:
                 p4 = (_lsb2(d_word, sign_bits, i, lane, w_a,
                             signed_a)[None, :] * x4) & 3
@@ -123,23 +144,32 @@ def _body(plan_n: int, lane: int, w_a: int, signed_a: bool, signed: bool,
         return word2, spills
 
     word, spills = jax.lax.fori_loop(
-        0, bk, step, (word_ref[...], spill_ref[...]))
-    word_ref[...] = word
+        0, bk, step, (ws.w_from_planes(word_ref[...]), spill_ref[...]))
+    word_ref[...] = ws.w_to_planes(word)
     spill_ref[...] = spills
 
     @pl.when(k_step == nsteps_k - 1)
     def _extract():
         # Eq. 3:  R̂_i = (2^L S_i + R_i) - S_{i-1}
-        mask = (1 << lane) - 1
         outs = []
         for i in range(n):
-            field = (word >> (i * lane)) & mask
+            field = ws.field(word, i * lane, lane)
             s_i = spills[..., i]
-            s_prev = spills[..., i - 1] if i > 0 else 0
             # lane results are exact dot products that fit int32 on
-            # every plan; the wide-word path computes them in int64
-            outs.append(((s_i << lane) + field - s_prev)
-                        .astype(jnp.int32))
+            # every plan; the wide-word path computes them mod 2^64 in
+            # the limb domain and hands back the low limb — the same
+            # truncation as the int64 oracle's astype(int32)
+            if two_limb:
+                acc = limb_ops.add(limb_ops.shift_left(
+                    limb_ops.from_i32(s_i), lane), field)
+                if i > 0:
+                    acc = limb_ops.sub(
+                        acc, limb_ops.from_i32(spills[..., i - 1]))
+                outs.append(acc.lo)
+            else:
+                s_prev = spills[..., i - 1] if i > 0 else 0
+                outs.append(((s_i.astype(ws.dtype) << lane)
+                             + field - s_prev).astype(jnp.int32))
         o_ref[...] = jnp.stack(outs, axis=-1)                         # [br,bg,n]
 
 
@@ -154,8 +184,8 @@ def sdv_matmul(x_q: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
       x_q: [R, K] integer activations (row-major), values within w_b
         bits (signed or unsigned per ``plan.signed_b``).
       w_words: [K, G] storage words (``prepare_sdv_weights``) in the
-        plan's word dtype — int32, or int64 for wide (DSP48E2/DSP58
-        emulation) words.
+        plan's transport layout — int32, with a leading (2,) limb-plane
+        axis ([2, K, G]) for wide (DSP48E2/DSP58) words.
       plan: SDV lane plan on any exact-wrap datapath.
 
     Returns:
@@ -165,31 +195,37 @@ def sdv_matmul(x_q: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
       padding is exact).
     """
     r, k = x_q.shape
-    _, g = w_words.shape
+    g = w_words.shape[-1]
     n, lane = plan.n, plan.lane
     sign_shift = plan.packed_width
     ws = bseg_common.sdv_word_spec(plan)
     assert ws.exact_wrap, plan.spec.name     # spill tracking needs wrap
     assert bseg_common.sdv_layout_bits(plan) <= plan.spec.w_word, plan
     assert w_words.dtype == ws.dtype, (w_words.dtype, ws.dtype)
+    assert w_words.ndim == (3 if ws.limbs == 2 else 2), \
+        (w_words.shape, ws.limbs)
     br = min(br, r)
     bg = min(bg, g)
     bk = min(bk, k)
     assert k % bk == 0, (k, bk)
     signed = plan.signed_a or plan.signed_b
     grid = (pl.cdiv(r, br), pl.cdiv(g, bg), k // bk)
+    if ws.limbs == 2:
+        w_spec = pl.BlockSpec((2, bk, bg), lambda ir, ig, ik: (0, ik, ig))
+    else:
+        w_spec = pl.BlockSpec((bk, bg), lambda ir, ig, ik: (ik, ig))
     return pl.pallas_call(
         functools.partial(_body, n, lane, plan.w_a, plan.signed_a, signed,
-                          sign_shift, k // bk, bk, 1, ws.dtype_name),
+                          sign_shift, k // bk, bk, 1, ws),
         grid=grid,
         in_specs=[
             pl.BlockSpec((br, bk), lambda ir, ig, ik: (ir, ik)),
-            pl.BlockSpec((bk, bg), lambda ir, ig, ik: (ik, ig)),
+            w_spec,
         ],
         out_specs=pl.BlockSpec((br, bg, n), lambda ir, ig, ik: (ir, ig, 0)),
         out_shape=jax.ShapeDtypeStruct((r, g, n), jnp.int32),
         scratch_shapes=[
-            pltpu.VMEM((br, bg), ws.dtype),
+            pltpu.VMEM(ws.plane_shape((br, bg)), ws.dtype),
             pltpu.VMEM((br, bg, n), jnp.int32),
         ],
         interpret=interpret,

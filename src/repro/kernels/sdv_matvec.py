@@ -23,8 +23,9 @@ The kernel body (pre-adder, spill tracker, extractor) is shared with
 the batched GEMM kernel — ``kernels/sdv_matmul._body`` with the
 K-major activation layout (``x_k_axis=0``); this wrapper is the
 decode-micro-batch special case.  Like the GEMM kernel the body is
-word-generic (``bseg_common.sdv_word_spec``): int32 words, or int64
-for the DSP48E2/DSP58 emulation words (x64 + interpret only).
+word-generic (``bseg_common.sdv_word_spec``): one int32 limb, or two
+carry-propagating int32 limb planes for the wide DSP48E2/DSP58 words
+— every plan compiles on any backend with int32.
 """
 from __future__ import annotations
 
@@ -50,38 +51,45 @@ def sdv_matvec(x_t: jnp.ndarray, w_words: jnp.ndarray, *, plan: SDVPlan,
     Args:
       x_t: [K, B] int8 activations (K-major), values within w_b bits.
       w_words: [K, G] storage words (from ``prepare_sdv_weights``) in
-        the plan's word dtype.
+        the plan's transport layout (leading (2,) limb-plane axis for
+        wide words: [2, K, G]).
       plan: SDV lane plan on any exact-wrap datapath.
 
     Returns:
       [B, G, n] int32 — exact per-lane dot products (dequantize outside).
     """
     k, b = x_t.shape
-    _, g = w_words.shape
+    g = w_words.shape[-1]
     n, lane = plan.n, plan.lane
     sign_shift = plan.packed_width
     ws = bseg_common.sdv_word_spec(plan)
     assert ws.exact_wrap, plan.spec.name     # spill tracking needs wrap
     assert bseg_common.sdv_layout_bits(plan) <= plan.spec.w_word, plan
     assert w_words.dtype == ws.dtype, (w_words.dtype, ws.dtype)
+    assert w_words.ndim == (3 if ws.limbs == 2 else 2), \
+        (w_words.shape, ws.limbs)
     bb = min(bb, b)
     bg = min(bg, g)
     bk = min(bk, k)
     assert k % bk == 0, (k, bk)
     signed = plan.signed_a or plan.signed_b
     grid = (pl.cdiv(b, bb), pl.cdiv(g, bg), k // bk)
+    if ws.limbs == 2:
+        w_spec = pl.BlockSpec((2, bk, bg), lambda ib, ig, ik: (0, ik, ig))
+    else:
+        w_spec = pl.BlockSpec((bk, bg), lambda ib, ig, ik: (ik, ig))
     return pl.pallas_call(
         functools.partial(_body, n, lane, plan.w_a, plan.signed_a, signed,
-                          sign_shift, k // bk, bk, 0, ws.dtype_name),
+                          sign_shift, k // bk, bk, 0, ws),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bk, bb), lambda ib, ig, ik: (ik, ib)),
-            pl.BlockSpec((bk, bg), lambda ib, ig, ik: (ik, ig)),
+            w_spec,
         ],
         out_specs=pl.BlockSpec((bb, bg, n), lambda ib, ig, ik: (ib, ig, 0)),
         out_shape=jax.ShapeDtypeStruct((b, g, n), jnp.int32),
         scratch_shapes=[
-            pltpu.VMEM((bb, bg), ws.dtype),
+            pltpu.VMEM(ws.plane_shape((bb, bg)), ws.dtype),
             pltpu.VMEM((bb, bg, n), jnp.int32),
         ],
         interpret=interpret,

@@ -52,12 +52,14 @@ jax.tree_util.register_dataclass(PackedLinear, data_fields=["words", "scale"],
 @dataclasses.dataclass
 class SDVLinear:
     """Arithmetic-packed quantized kernel: SDV storage words
-    [d_in, G] (G = ceil(d_out/plan.n) lane groups, dtype per the
-    plan's word spec), scale [d_out] f32; executed via
+    [d_in, G] int32 (G = ceil(d_out/plan.n) lane groups) — or
+    [2, d_in, G] limb planes for the wide (2-limb) DSP48E2/DSP58
+    plans — scale [d_out] f32; executed via
     ``kernels/ops.packed_matmul``.  A scanned layer stack keeps a
     leading layer axis on ``words``/``scale`` ([L, d_in, G] /
-    [L, d_out]); ``lax.scan`` slices it back off, yielding the
-    per-layer container unchanged (same pattern as ``BSEGConv``)."""
+    [L, 2, d_in, G] / [L, d_out]); ``lax.scan`` slices it back off,
+    yielding the per-layer container unchanged (same pattern as
+    ``BSEGConv``)."""
     words: jnp.ndarray
     scale: jnp.ndarray
     plan: SDVPlan
@@ -149,7 +151,8 @@ def sdv_matmul_apply(qw: SDVLinear, x: jnp.ndarray,
 @dataclasses.dataclass
 class BSEGConv:
     """Arithmetic-packed short depthwise conv: ``kappa`` [G, C] int32
-    packed tap-group factors (pre-adder applied), ``tap_sum`` [C] i32
+    packed tap-group factors (pre-adder applied; [2, G, C] limb planes
+    on the wide 2-limb plans), ``tap_sum`` [C] i32
     for the zero-point correction, per-channel weight ``scale`` [C]
     f32, float ``bias`` [C]; executed via ``kernels/ops.bseg_conv1d``.
     """
@@ -189,8 +192,13 @@ def pack_conv_bseg(conv_params: dict, plan: BSEGPlan) -> BSEGConv:
     q = jnp.clip(jnp.round(wf / scale), -qmax, qmax).astype(jnp.int32)
     kappa, tap_sum = ops.prepare_bseg_taps(q.reshape(-1, taps), plan)
     if w.ndim == 3:                      # [L, C, taps] stacked blocks
+        from repro.kernels import bseg_common
         stack, c = w.shape[0], w.shape[1]
-        kappa = kappa.reshape(-1, stack, c).swapaxes(0, 1)   # [L, G, C]
+        if bseg_common.word_spec(plan).limbs == 2:   # [2, G, L*C]
+            kappa = kappa.reshape(2, -1, stack, c) \
+                .transpose(2, 0, 1, 3)               # [L, 2, G, C]
+        else:
+            kappa = kappa.reshape(-1, stack, c).swapaxes(0, 1)  # [L, G, C]
         tap_sum = tap_sum.reshape(stack, c)
     return BSEGConv(kappa=kappa, tap_sum=tap_sum,
                     scale=scale[..., 0].astype(jnp.float32),
@@ -239,8 +247,11 @@ def bseg_conv_apply(qc: BSEGConv, x: jnp.ndarray, *,
 def materialize(pl, dtype=jnp.bfloat16) -> jnp.ndarray:
     """Unpack + dequantize -> [..., d_in, d_out] in ``dtype``."""
     if isinstance(pl, SDVLinear):
-        from repro.kernels import ref
-        if pl.words.ndim == 3:           # scanned layer stack
+        from repro.kernels import bseg_common, ref
+        # per-layer words are [K, G], or [2, K, G] limb planes on the
+        # wide (2-limb) plans — one extra axis on top means a stack
+        base = 2 + (bseg_common.sdv_word_spec(pl.plan).limbs == 2)
+        if pl.words.ndim == base + 1:    # scanned layer stack
             return jnp.stack([
                 materialize(SDVLinear(words=pl.words[i],
                                       scale=pl.scale[i], plan=pl.plan,

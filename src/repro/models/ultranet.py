@@ -13,9 +13,9 @@ plus a 1x1 head, quantized W4A4.  Two execution paths:
     ``density`` x fewer wide multiplies.  With ``plans=`` from
     ``repro.planner`` the layers are free to leave the INT32 lane: the
     word-generic kernels run FP32M plans on fp32 words and
-    DSP48E2/DSP58 plans on int64 emulation words (the planner puts the
+    DSP48E2/DSP58 plans on two-limb int32 words (the planner puts the
     W4A4 3x3 body on DSP48E2 BSEG 3x2 — density 6 vs the INT32 ceiling
-    of 4 — see ``BENCH_4.json``), still bit-exact.
+    of 4 — see ``BENCH_6.json``), still bit-exact.
 
 ``mode="bseg_jnp"`` keeps the seed broadcast-materialized pure-jnp
 emulation (one ``core/bseg.py`` scan per kernel row, activations

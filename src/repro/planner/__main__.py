@@ -51,13 +51,9 @@ def main(argv: Optional[list] = None) -> int:
                     help="also write the table as JSON")
     args = ap.parse_args(argv)
 
-    # like benchmarks/run.py: the DSP48E2/DSP58 emulation words are
-    # int64, and the conv kernels run them when x64 is on — without
-    # this the plan table would (correctly, but unhelpfully for an
-    # analysis CLI) gate every wide-word plan to the ref route
-    import jax
-    jax.config.update("jax_enable_x64", True)
-
+    # no jax_enable_x64 anywhere: the wide DSP48E2/DSP58 words run as
+    # two int32 limb planes (core.limbs), so every plan the table
+    # prints dispatches to a compiled kernel route as-is
     from repro import planner
 
     cache = None

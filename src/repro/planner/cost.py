@@ -7,14 +7,15 @@ The score is an *effective wide-multiply count* — the paper's currency
      on (``select_packed_route`` / ``select_conv_route`` with
      ``explain=True``): ``sdv_num_multiplies`` for the SDV GEMM/GEMV,
      ``bseg_conv2d_num_multiplies`` / ``bseg_num_multiplies`` for the
-     conv kernels.  Both kernel families are datapath-generic: the
-     BSEG conv kernels run int32 / fp32 / int64 word representations
-     and the SDV GEMM/GEMV kernels run int32 words plus the int64
-     DSP48E2/DSP58 emulation words — so wide-word matmul *and* conv
-     plans are priced as *kernel* routes in the paper's wide-multiply
-     currency (one word, ``n`` / ``n_k * n_i`` MACs), not as ref
-     fallbacks.  A remaining ref fallback (fp32m SDV — rounding breaks
-     spill tracking, int8-staging overflow, even taps, x64 off, no
+     conv kernels.  Both kernel families are word-generic
+     (``bseg_common.WordSpec``): one int32 limb for 32-bit words, fp32
+     for FP32M convs, two carry-propagating int32 limbs for the wide
+     DSP48E2/DSP58 words — so wide-word matmul *and* conv plans
+     compile everywhere and are priced as *kernel* routes in the
+     paper's wide-multiply currency (one word, ``n`` / ``n_k * n_i``
+     MACs), never as ref fallbacks.  A remaining ref fallback (fp32m
+     SDV — rounding breaks spill tracking, int8-staging overflow, even
+     taps, a hand-built plan overrunning its own storage word, no
      Pallas backend) is charged the *naive* MAC count times
      ``REF_ROUTE_FACTOR`` — the plan never reaches the packed
      datapath, so its density is 1 and XLA's fusion does not make the

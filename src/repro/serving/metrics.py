@@ -77,8 +77,13 @@ def packed_layer_stats(qparams: Any, rows: int,
                 walk(v, f"{path}/{k}" if path else k)
             return
         if isinstance(tree, SDVLinear):
-            d_in = tree.words.shape[-2]      # [d_in, G] / [L, d_in, G]
-            stack = tree.words.shape[0] if tree.words.ndim == 3 else 1
+            from repro.kernels import bseg_common
+            # [d_in, G] (+ a leading (2,) limb-plane axis on wide
+            # plans, + a leading L layer axis when scan-stacked)
+            d_in = tree.words.shape[-2]
+            base = 2 + (bseg_common.sdv_word_spec(tree.plan).limbs == 2)
+            stack = tree.words.shape[0] if tree.words.ndim == base + 1 \
+                else 1
             macs = rows * d_in * tree.d_out * stack
             route, reason = ops.select_packed_route(
                 rows, plan=tree.plan, use_kernel=use_kernel, explain=True)

@@ -13,18 +13,27 @@ dispatch layer:
   * EXECUTION SWEEP: every enumerable plan for representative bit
     configs runs through ``packed_conv2d`` / ``packed_matmul`` and is
     asserted bit-exact against ``ref.conv2d_int_ref`` / the integer
-    GEMM oracle — the INT32 lane, the FP32M fp32 word and the
-    DSP48E2/DSP58 int64 emulation words all through the same kernel
-    bodies.  A future kernel change that silently corrupts one
-    datapath fails here by name.
-  * HYPOTHESIS SWEEP: arbitrary (w_k, w_i) pairs on random datapaths
-    through the conv dispatch.
+    GEMM oracle — the INT32 lane, the FP32M fp32 word and the wide
+    DSP48E2/DSP58 words (two int32 limb planes, ``repro.core.limbs``)
+    all through the same kernel bodies.  A future kernel change that
+    silently corrupts one datapath fails here by name.
+  * NO-X64 SWEEP (``make test-wide-words``): every enumerable
+    DSP48E2/DSP58 conv2d / conv1d / matmul plan executes its kernel
+    route inside ``jax.experimental.disable_x64()`` and must match the
+    oracle bit-exactly — the tentpole acceptance surface for the
+    two-limb representation.  The int64 single-word path survives ONLY
+    as the oracle these sweeps compare against.
+  * HYPOTHESIS SWEEPS: arbitrary (w_k, w_i) pairs on random datapaths
+    through the conv dispatch, and arbitrary u64 operand pairs through
+    the limb carry-propagation primitives vs Python mod-2^64 ints.
 
-conftest.py enables ``jax_enable_x64`` (the int64 emulation words need
-it); the backend is CPU interpret mode.
+conftest.py enables ``jax_enable_x64`` for the *oracles*; the kernel
+routes themselves never need it (the no-x64 sweep proves it); the
+backend is CPU interpret mode.
 """
 import zlib
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -64,10 +73,10 @@ RNG = np.random.default_rng(41)
 #: the PR-4 acceptance surface).  A conv plan with w_i <= 7 and odd
 #: taps on any of these must land on a kernel route, never ref.
 CONV_IMPLEMENTED = ("int32", "fp32m", "dsp48e2", "dsp58")
-#: datapaths the SDV GEMM/GEMV kernels implement (PR-5: the kernels
-#: are word-generic — int32 words plus the int64 DSP48E2/DSP58
-#: emulation words; only FP32M stays ref, because fp32 rounding breaks
-#: SDV spill-over tracking, a paper constraint rather than an
+#: datapaths the SDV GEMM/GEMV kernels implement (the kernels are
+#: word-generic — int32 words plus the wide DSP48E2/DSP58 words as two
+#: int32 limb planes; only FP32M stays ref, because fp32 rounding
+#: breaks SDV spill-over tracking, a paper constraint rather than an
 #: implementation gap).
 MATMUL_KERNEL_DATAPATHS = ("int32", "dsp48e2", "dsp58")
 
@@ -251,9 +260,9 @@ _MM_EXEC_CASES = [(ly, p) for ly in _MM_EXEC_LAYERS
          for ly, p in _MM_EXEC_CASES])
 def test_matmul_datapath_diff(ly, plan):
     """Every enumerable W4A4/W4A8 SDV plan through ``packed_matmul``
-    (auto route: int32 words AND the int64 DSP48E2/DSP58 emulation
-    words on the kernels; fp32m on the jnp ref decode) == the integer
-    GEMM oracle."""
+    (auto route: int32 words AND the 2-limb DSP48E2/DSP58 words on the
+    kernels; fp32m on the jnp ref decode) == the integer GEMM
+    oracle."""
     rng = np.random.default_rng(zlib.crc32(_plan_id(plan).encode()))
     w_int = jnp.asarray(rng.integers(-(1 << (plan.w_a - 1)),
                                      1 << (plan.w_a - 1),
@@ -275,7 +284,8 @@ def test_overrun_storage_layout_degrades_to_lossless_ref():
     """A hand-built plan whose packed field + parked sign bits overrun
     the datapath word must (a) route to ref with the overrun reason,
     not raise in auto, and (b) still pack + execute bit-exact — the
-    storage words widen to int64 so the jnp ref decode is lossless."""
+    storage widens to two int32 limb planes so the jnp ref decode is
+    lossless."""
     bad = SDVPlan(spec=INT32, w_a=4, w_b=8, lane=11, n=4,
                   signed_a=True, signed_b=True)
     assert bad.packed_width + bad.n > 32
@@ -287,7 +297,9 @@ def test_overrun_storage_layout_degrades_to_lossless_ref():
     w_int = jnp.asarray(rng.integers(-8, 8, (10, 6)))
     x = jnp.asarray(rng.integers(-128, 128, (4, 6)), jnp.int32)
     words = ops.prepare_sdv_weights(w_int, bad)
-    assert words.dtype == jnp.int64          # widened, not truncated
+    # widened to limb planes, not truncated — and never int64
+    assert words.ndim == 3 and words.shape[0] == 2
+    assert words.dtype == jnp.int32
     y = ops.packed_matmul(x, words, plan=bad, m=10)
     assert (np.asarray(y) == np.asarray(x) @ np.asarray(w_int).T).all()
 
@@ -349,8 +361,8 @@ def test_plan_bseg_rejects_biased_word_overrun():
 
 def test_conv_sdv_plan_overrides_bit_exact():
     """Planner SDV choices for convs (the im2col override path) on
-    every kernel-capable word (int32 + the int64 emulation words):
-    every enumerable override == the conv oracle."""
+    every kernel-capable word (int32 + the 2-limb wide words): every
+    enumerable override == the conv oracle."""
     ly = _CONV_EXEC_LAYER
     base = plan_bseg(INT32, ly.w_bits, ly.a_bits)
     x = jnp.asarray(RNG.integers(0, 16, (1, ly.h, ly.w, ly.c_in)),
@@ -365,6 +377,192 @@ def test_conv_sdv_plan_overrides_bit_exact():
         y = ops.packed_conv2d(x, w, plan=base, mode="im2col",
                               zero_point=0, sdv_plan=sdv)
         assert (np.asarray(y) == want).all(), sdv
+
+
+# ---------------------------------------------------------------------------
+# no-x64 sweep: every enumerable DSP48E2/DSP58 plan on its kernel route
+# inside jax.experimental.disable_x64() — the tentpole acceptance
+# surface for the two-limb int32 representation.  The oracle (`want`)
+# is computed in numpy OUTSIDE the context.
+# ---------------------------------------------------------------------------
+
+WIDE_SPECS = ("dsp48e2", "dsp58")
+
+_WIDE_MM_CASES = [
+    (ly, p) for ly in _MM_EXEC_LAYERS
+    for p in planner.enumerate_plans(
+        ly, specs=[DATAPATHS[n] for n in WIDE_SPECS])]
+
+
+@pytest.mark.parametrize(
+    "ly,plan", _WIDE_MM_CASES,
+    ids=[f"w{ly.w_bits}a{ly.a_bits}-{_plan_id(p)}"
+         for ly, p in _WIDE_MM_CASES])
+def test_matmul_wide_word_no_x64(ly, plan):
+    """Every enumerable wide-word SDV plan dispatches to a Pallas
+    kernel route with x64 OFF — storage is two int32 limb planes —
+    and matches the integer GEMM oracle bit-exactly."""
+    rng = np.random.default_rng(zlib.crc32(_plan_id(plan).encode()))
+    w_np = rng.integers(-(1 << (plan.w_a - 1)), 1 << (plan.w_a - 1),
+                        (ly.m, ly.k))
+    lo, hi = ((-(1 << (plan.w_b - 1)), 1 << (plan.w_b - 1))
+              if plan.signed_b else (0, 1 << plan.w_b))
+    x_np = rng.integers(lo, hi, (ly.rows, ly.k))
+    want = x_np @ w_np.T
+    with jax.experimental.disable_x64():
+        route = ops.select_packed_route(ly.rows, plan=plan)
+        assert route in ("sdv_matmul", "sdv_matvec"), (plan, route)
+        words = ops.prepare_sdv_weights(
+            jnp.asarray(w_np, jnp.int32), plan)
+        assert words.ndim == 3 and words.shape[0] == 2, plan
+        assert words.dtype == jnp.int32, plan
+        y = ops.packed_matmul(jnp.asarray(x_np, jnp.int32), words,
+                              plan=plan, m=ly.m)
+    assert (np.asarray(y) == want).all(), (plan, route)
+
+
+_WIDE_CONV_PLANS = [
+    p for p in planner.enumerate_plans(
+        _CONV_EXEC_LAYER, specs=[DATAPATHS[n] for n in WIDE_SPECS])
+    if isinstance(p, BSEGPlan)]
+
+
+@pytest.mark.parametrize(
+    "plan", _WIDE_CONV_PLANS,
+    ids=[_plan_id(p) for p in _WIDE_CONV_PLANS])
+def test_conv2d_wide_word_no_x64(plan):
+    """Every enumerable wide-word BSEG conv2d plan on its kernel route
+    with x64 OFF == the integer conv oracle."""
+    ly = _CONV_EXEC_LAYER
+    zp = (1 << (plan.w_i - 1)) if (plan.lane + plan.n_k) % 2 else 0
+    rng = np.random.default_rng(zlib.crc32(_plan_id(plan).encode()))
+    x_np = rng.integers(-zp, (1 << plan.w_i) - zp,
+                        (1, ly.h, ly.w, ly.c_in))
+    w_np = rng.integers(-(1 << (plan.w_k - 1)), 1 << (plan.w_k - 1),
+                        (ly.c_out, ly.c_in, ly.kh, ly.kw))
+    want = np.asarray(ref.conv2d_int_ref(jnp.asarray(x_np),
+                                         jnp.asarray(w_np)))
+    with jax.experimental.disable_x64():
+        route = ops.select_conv_route(x_np.shape, w_np.shape, plan=plan)
+        assert route != "ref", (plan, route)
+        y = ops.packed_conv2d(jnp.asarray(x_np, jnp.int32),
+                              jnp.asarray(w_np, jnp.int8), plan=plan,
+                              mode="auto", zero_point=zp)
+    assert (np.asarray(y) == want).all(), (plan, route)
+
+
+_WIDE_CONV1D_LAYER = planner.conv1d_spec("d", 6, 5, w_bits=4, a_bits=4,
+                                         seq=13)
+_WIDE_CONV1D_PLANS = [
+    p for p in planner.enumerate_plans(
+        _WIDE_CONV1D_LAYER, specs=[DATAPATHS[n] for n in WIDE_SPECS])
+    if isinstance(p, BSEGPlan)]
+
+
+@pytest.mark.parametrize(
+    "plan", _WIDE_CONV1D_PLANS,
+    ids=[_plan_id(p) for p in _WIDE_CONV1D_PLANS])
+def test_conv1d_wide_word_no_x64(plan):
+    """Every enumerable wide-word BSEG conv1d plan on the depthwise
+    kernel with x64 OFF == the causal correlation oracle."""
+    rng = np.random.default_rng(zlib.crc32(_plan_id(plan).encode()))
+    taps_np = rng.integers(-8, 8, (6, 5))
+    x_np = rng.integers(-8, 8, (2, 13, 6))
+    want = np.asarray(ref.conv1d_causal_ref(jnp.asarray(x_np),
+                                            jnp.asarray(taps_np)))
+    with jax.experimental.disable_x64():
+        assert ops.select_conv1d_route(plan) == "bseg_conv1d", plan
+        kappa, tsum = ops.prepare_bseg_taps(
+            jnp.asarray(taps_np, jnp.int32), plan)
+        assert kappa.dtype == jnp.int32 and kappa.shape[0] == 2, plan
+        y = ops.bseg_conv1d(jnp.asarray(x_np, jnp.int8), kappa, tsum,
+                            plan=plan, n_taps=5, zero_point=8,
+                            use_kernel=True)
+    assert (np.asarray(y) == want).all(), plan
+
+
+def test_planner_wide_choice_no_x64():
+    """With x64 off the auto planner still picks the wide DSP48E2 n=3
+    W4A8 plan (the density win that motivated the limb refactor) and
+    prices it as a kernel route."""
+    with jax.experimental.disable_x64():
+        choice = planner.choose_plan(
+            planner.matmul_spec("m", 4, 256, 512, w_bits=4, a_bits=8))
+        assert choice.plan.spec.name in WIDE_SPECS, choice.plan
+        assert choice.plan.n == 3, choice.plan
+        assert choice.cost.route in ("sdv_matmul", "sdv_matvec"), \
+            choice.cost
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: arbitrary u64 operands through the limb primitives
+# ---------------------------------------------------------------------------
+
+def _limbs_of(v):
+    """Python int (mod 2^64) -> scalar Limbs, no int64 anywhere."""
+    from repro.core import limbs as L
+    lo, hi = L.const_limbs(v)
+    return L.Limbs(jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32))
+
+
+def _int_of(w):
+    return (int(np.uint32(np.asarray(w.hi))) << 32) | \
+        int(np.uint32(np.asarray(w.lo)))
+
+
+@hypothesis.given(
+    a=st.integers(min_value=0, max_value=2 ** 64 - 1),
+    b=st.integers(min_value=0, max_value=2 ** 64 - 1),
+    sh=st.integers(min_value=0, max_value=63),
+    width=st.integers(min_value=1, max_value=32),
+)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_limb_carry_property(a, b, sh, width):
+    """The limb primitives (add / sub / mul / shifts / mod_pow2 /
+    field) == Python mod-2^64 integer arithmetic on arbitrary operand
+    pairs, with x64 off — the carry-propagation proof obligation under
+    the kernels."""
+    from repro.core import limbs as L
+    m64 = (1 << 64) - 1
+    with jax.experimental.disable_x64():
+        la, lb = _limbs_of(a), _limbs_of(b)
+        assert _int_of(L.add(la, lb)) == (a + b) & m64
+        assert _int_of(L.sub(la, lb)) == (a - b) & m64
+        assert _int_of(L.mul(la, lb)) == (a * b) & m64
+        assert _int_of(L.shift_left(la, sh)) == (a << sh) & m64
+        assert _int_of(L.shift_right_logical(la, sh)) == a >> sh
+        assert _int_of(L.mod_pow2(la, sh + 1)) == a & ((1 << (sh + 1)) - 1)
+        lsb = min(sh, 64 - width)
+        assert _int_of(L.field(la, lsb, width)) == \
+            (a >> lsb) & ((1 << width) - 1)
+        # round trip through the transport layout
+        assert _int_of(L.from_planes(L.stack_planes(la))) == a
+
+
+def test_limb_carry_deterministic():
+    """Deterministic slice of the limb property (runs even without
+    hypothesis): adversarial carry/borrow operand pairs plus a random
+    sample, vs Python mod-2^64 ints, x64 off."""
+    from repro.core import limbs as L
+    m64 = (1 << 64) - 1
+    edge = [0, 1, (1 << 31) - 1, 1 << 31, (1 << 32) - 1, 1 << 32,
+            (1 << 63) - 1, 1 << 63, m64, 0xDEADBEEFCAFEBABE]
+    rng = np.random.default_rng(17)
+    rand = [int(v) for v in rng.integers(0, m64, 12, dtype=np.uint64)]
+    with jax.experimental.disable_x64():
+        for a in edge + rand[:6]:
+            for b in edge[:4] + rand[6:]:
+                la, lb = _limbs_of(a), _limbs_of(b)
+                assert _int_of(L.add(la, lb)) == (a + b) & m64, (a, b)
+                assert _int_of(L.sub(la, lb)) == (a - b) & m64, (a, b)
+                assert _int_of(L.mul(la, lb)) == (a * b) & m64, (a, b)
+            for sh in (0, 1, 11, 31, 32, 33, 47, 63):
+                la = _limbs_of(a)
+                assert _int_of(L.shift_left(la, sh)) == (a << sh) & m64
+                assert _int_of(L.shift_right_logical(la, sh)) == a >> sh
+                assert _int_of(L.field(la, sh, 11)) == (a >> sh) & 0x7FF
+            assert _int_of(L.from_planes(L.stack_planes(_limbs_of(a)))) \
+                == a
 
 
 # ---------------------------------------------------------------------------

@@ -151,9 +151,9 @@ def test_cost_penalizes_ref_fallbacks():
     cost = planner.score_plan(layer, fp32m)
     assert cost.route == "ref" and "fp32" in cost.reason
     assert cost.score >= layer.macs          # naive MACs x penalty
-    # the emulation datapaths are kernel routes now (word-generic SDV
-    # GEMM, int64 emulation words) — and at W4A8 they pack 3 lanes vs
-    # INT32's 2, so the wide word *wins* the layer
+    # the wide datapaths are kernel routes now (word-generic SDV GEMM,
+    # two int32 limb planes per wide word) — and at W4A8 they pack 3
+    # lanes vs INT32's 2, so the wide word *wins* the layer
     dsp = plan_sdv(DATAPATHS["dsp48e2"], 4, 8, park_sign_bits=True)
     cost48 = planner.score_plan(layer, dsp)
     assert cost48.route == "sdv_matmul", cost48.reason
@@ -200,8 +200,8 @@ def test_no_int32_default_still_plans_and_renders():
 
 def test_conv1d_route_selector_shared_gates():
     assert ops.select_conv1d_route(plan_bseg(INT32, 4, 4)) == "bseg_conv1d"
-    # the conv kernels are word-generic now: the int64 emulation words
-    # land on the kernel route (x64 is on in conftest, backend is CPU)
+    # the conv kernels are word-generic: the wide DSP words run as two
+    # int32 limb planes on the kernel route — no x64 involved
     route, reason = ops.select_conv1d_route(
         plan_bseg(DATAPATHS["dsp48e2"], 4, 4), explain=True)
     assert route == "bseg_conv1d" and "dsp48e2" in reason
@@ -237,9 +237,9 @@ def test_route_explain_tuples():
         (1, 8, 8, 3), (16, 3, 3, 3), plan=plan_bseg(INT32, 4, 4),
         explain=True)
     assert route == "bseg_conv2d"
-    # int64-word datapaths run on the word-generic MATMUL kernels now
-    # (x64 is on in conftest, backend is CPU interpret); fp32m still
-    # refuses — rounding breaks SDV spill tracking
+    # wide-word datapaths run on the word-generic MATMUL kernels (two
+    # int32 limb planes — no x64); fp32m still refuses — rounding
+    # breaks SDV spill tracking
     dsp = plan_sdv(DATAPATHS["dsp58"], 4, 8, park_sign_bits=True)
     route, reason = ops.select_packed_route(64, plan=dsp, explain=True)
     assert route == "sdv_matmul" and "GEMV_MAX_ROWS" in reason
@@ -333,7 +333,9 @@ def _serve_tree():
 def _assert_sdv_leaf_bit_exact(leaf):
     """The packed GEMM on a routed layer == the integer ref oracle."""
     w_int = np.asarray(ref.sdv_unpack_words_ref(leaf.words, plan=leaf.plan))
-    d_in = leaf.words.shape[0]
+    # words are [K, G] for 1-limb plans, [2, K, G] limb planes for the
+    # wide words: K is shape[-2] either way
+    d_in = leaf.words.shape[-2]
     lim = 1 << (leaf.plan.w_b - 1)
     xq = jnp.asarray(RNG.integers(-lim, lim, (12, d_in)), jnp.int32)
     y = ops.packed_matmul(xq, leaf.words, plan=leaf.plan, m=leaf.d_out)
@@ -534,6 +536,32 @@ def test_plan_cache_choice_hits_under_use_kernel_false(tmp_path):
     assert cache.get_choice(layer, backend="tpu") is not None
 
 
+def test_plan_cache_invalidates_stale_wide_word_entries(tmp_path):
+    """The stale-cache hazard THIS PR creates: a cache written before
+    the two-limb refactor records wide DSP48E2/DSP58 plans on the
+    ``ref`` route (the old x64+interpret gate refused them on the
+    kernels).  Those entries must invalidate cleanly — the live
+    dispatch puts the same plans on SDV kernel routes."""
+    from repro.planner import autotune as at
+    layer = planner.matmul_spec("m", 4, 64, 48, w_bits=4, a_bits=8)
+    choice = planner.choose_plan(layer)
+    # the live winner IS a wide word on a kernel route
+    assert choice.plan.spec.name in ("dsp48e2", "dsp58"), choice.plan
+    assert choice.cost.route in ("sdv_matmul", "sdv_matvec"), choice.cost
+    backend = at._backend()
+    cache = planner.PlanCache(path=str(tmp_path / "wide.json"))
+    cache.entries[at.choice_key(layer, backend)] = {
+        "plan": planner.plan_to_dict(choice.plan),
+        "score": choice.cost.score, "route": "ref", "source": "analytic"}
+    assert cache.get_choice(layer) is None          # stale -> evicted
+    assert at.choice_key(layer, backend) not in cache.entries
+    # re-recorded under the live route, it round-trips
+    cache.put_choice(choice, source="analytic", backend=backend)
+    got = cache.get_choice(layer)
+    assert got is not None and got.plan == choice.plan
+    assert got.cost.route == choice.cost.route
+
+
 def test_autotune_retimes_stale_timing_entries(tmp_path):
     """A timing entry whose recorded route went stale is re-measured
     (the cached microseconds belong to a different kernel)."""
@@ -588,3 +616,24 @@ def test_cli_main_smoke(tmp_path, capsys):
     payload = json.load(open(out_json))
     assert len(payload["layers"]) == 9
     assert any(l["differs_from_default"] for l in payload["layers"])
+
+
+def test_cli_main_no_x64(tmp_path, capsys):
+    """The planner CLI must not force-enable x64 (the wide words run
+    as two int32 limb planes): under ``disable_x64`` the table still
+    builds, x64 stays off afterwards, and every wide-datapath layer
+    the table prints is priced on a kernel route."""
+    import jax
+    from repro.planner.__main__ import main
+    out_json = str(tmp_path / "plan.json")
+    with jax.experimental.disable_x64():
+        assert main(["--arch", "ultranet", "--smoke", "--json",
+                     out_json]) == 0
+        assert not jax.config.jax_enable_x64, \
+            "the CLI re-enabled x64 behind the caller's back"
+    capsys.readouterr()
+    payload = json.load(open(out_json))
+    wide = [l for l in payload["layers"]
+            if l["plan"].get("spec") not in ("int32", "fp32m")]
+    assert wide, payload["layers"]
+    assert all(l["route"] != "ref" for l in wide), wide
