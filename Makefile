@@ -1,5 +1,5 @@
 .PHONY: test dev-deps planner-smoke planner-test test-datapaths \
-        test-wide-words serve-smoke test-serving
+        test-wide-words serve-smoke test-serving chaos-smoke test-chaos
 
 # tier-1 verify (ROADMAP.md): the whole suite, fail-fast, quiet
 test:
@@ -33,6 +33,17 @@ serve-smoke:
 
 test-serving:
 	PYTHONPATH=src python -m pytest -q tests/test_serving.py
+
+# fault tolerance: the seeded chaos sweep (identical Poisson traffic
+# with and without injected faults; zero lost requests is the gate)
+chaos-smoke:
+	PYTHONPATH=src python -m repro.serving.loadgen --arch tinyllama-1.1b \
+	    --smoke --chaos --fault-classes compile_fail,kernel_loss \
+	    --rates 60 --duration 0.4 --prompt-len 6 --new-tokens 4 \
+	    --batch 2 --buckets 16,24 --retries 3
+
+test-chaos:
+	PYTHONPATH=src python -m pytest -q tests/test_chaos.py
 
 dev-deps:
 	pip install -r requirements-dev.txt

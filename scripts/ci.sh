@@ -88,6 +88,52 @@ assert any(u["kernel_routed_layers"] > 0
 print(f"BENCH_5.json ok: {sorted(computes)} x "
       f"{sorted({c['rate_per_s'] for c in payload['curves']})} req/s")
 PY
+# chaos smoke: a tiny arch under seeded fault injection (two fault
+# classes) — the run must complete with ZERO lost requests: every
+# admitted request reaches exactly one terminal outcome even while
+# buckets fail, quarantine and recover
+BENCH7_SMOKE="${TMPDIR:-/tmp}/bench7_smoke.json"
+python -m repro.serving.loadgen --arch tinyllama-1.1b --smoke --chaos \
+    --fault-classes compile_fail,kernel_loss --rates 60 --duration 0.4 \
+    --prompt-len 6 --new-tokens 4 --batch 2 --buckets 16,24 \
+    --retries 3 --json "$BENCH7_SMOKE"
+python - "$BENCH7_SMOKE" <<'PY'
+import json, sys
+payload = json.load(open(sys.argv[1]))
+assert payload["bench"] == "fault_tolerance", payload.get("bench")
+flags = sorted(p["faults"] for p in payload["points"])
+assert flags == [False, True], flags     # one clean + one chaos point
+for p in payload["points"]:
+    assert p["lost_requests"] == 0, p["client_outcomes"]
+    assert p["client_outcomes"]["lost"] == 0, p["client_outcomes"]
+    assert p["client_outcomes"]["ok"] > 0, p["client_outcomes"]
+    total = sum(p["client_outcomes"].values())
+    assert total == p["offered_requests"], p["client_outcomes"]
+chaos = next(p for p in payload["points"] if p["faults"])
+assert payload["fault_injections"], "no faults were injected"
+print(f"chaos smoke ok: {payload['fault_injections']} injected, "
+      f"0 lost across {sum(p['offered_requests'] for p in payload['points'])} "
+      f"offered requests, {chaos['quarantines']} quarantines / "
+      f"{chaos['recoveries']} recoveries")
+PY
+# ... and the tracked BENCH_7 payload: same invariants, all classes
+python - BENCH_7.json <<'PY'
+import json, sys
+payload = json.load(open(sys.argv[1]))
+assert payload["bench"] == "fault_tolerance" and payload["pr"] == 7
+assert set(payload["fault_classes"]) == {
+    "compile_fail", "kernel_loss", "plan_cache_corrupt", "slow_wave",
+    "malformed"}, payload["fault_classes"]
+for p in payload["points"]:
+    assert p["lost_requests"] == 0, p
+    assert p["client_outcomes"]["ok"] > 0, p
+chaos = next(p for p in payload["points"] if p["faults"])
+assert chaos["quarantines"] >= 1, chaos    # the breaker actually fired
+assert chaos["plan_cache_demoted"] is True, chaos
+print(f"BENCH_7.json ok: p99 {chaos['p99_ms']:.1f} ms under chaos vs "
+      f"{payload['points'][0]['p99_ms']:.1f} ms clean, "
+      f"shed rate {chaos['shed_rate']:.3f}, 0 lost")
+PY
 # bench smoke: the kernel benchmarks must RUN on tiny shapes (the
 # trajectory JSON goes to a scratch path, not the tracked BENCH_<pr>);
 # x64 unset — kernelbench asserts the wide-word rows measure the

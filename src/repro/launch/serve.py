@@ -105,22 +105,29 @@ def _run_single_batch(cfg, args, params):
 
 
 def _run_engine(cfg, args, params):
-    from repro.serving import Backpressure, BucketShape, Engine
+    from repro.serving import Backpressure, BucketShape, Engine, FaultPlan
 
     s_maxes = ([int(s) for s in args.buckets.split(",") if s]
                if args.buckets else
                [args.prompt_len + args.new_tokens,
                 2 * (args.prompt_len + args.new_tokens)])
+    faults = None
+    if args.chaos:
+        faults = FaultPlan.chaos(args.chaos_seed)
     engine = Engine(cfg, params, compute=args.packed_compute,
                     weight_bits=args.weight_bits, act_bits=args.act_bits,
                     conv_datapath=args.conv_datapath,
                     plan_policy=args.plan_policy,
                     plan_cache=args.plan_cache,
                     buckets=tuple(BucketShape(args.batch, s)
-                                  for s in s_maxes))
+                                  for s in s_maxes),
+                    breaker_threshold=2 if args.chaos else 3,
+                    breaker_cooldown_s=0.2 if args.chaos else 2.0,
+                    faults=faults)
     print(f"{cfg.name}: engine, {args.packed_compute} compute, "
           f"plan policy {engine.plan_policy}, buckets "
-          f"{[b.key for b in engine.buckets]}")
+          f"{[b.key for b in engine.buckets]}"
+          + (f", chaos seed {args.chaos_seed}" if args.chaos else ""))
 
     rng = np.random.default_rng(0)
     n = args.requests or 2 * args.batch
@@ -139,11 +146,19 @@ def _run_engine(cfg, args, params):
     comps = engine.drain()
     snap = engine.metrics.snapshot()
     print(f"{snap['requests_completed']} done "
-          f"({snap['requests_rejected']} shed), "
+          f"({snap['requests_rejected']} rejected, "
+          f"{snap['requests_shed']} shed), "
           f"{snap['tokens_per_s']:.1f} tok/s, "
           f"p50 {snap['latency']['p50_ms']:.1f} ms, "
           f"p99 {snap['latency']['p99_ms']:.1f} ms, "
           f"{snap['waves']['count']} waves")
+    if args.chaos:
+        f = snap["faults"]
+        print(f"chaos: {f['wave_failures']} wave failures "
+              f"{f['kinds']}, {f['quarantines']} quarantines, "
+              f"{f['recoveries']} recoveries, {f['rerouted']} rerouted, "
+              f"{f['fallback_waves']} fallback waves; "
+              f"health {engine.bucket_health()}")
     for key, util in engine.plan_report().items():
         print(f"bucket {key}: {util['kernel_routed_layers']}/"
               f"{util['packed_layers']} packed layers on kernel routes, "
@@ -173,6 +188,11 @@ def main():
                          "(default: prompt+new and 2x)")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="engine: per-request deadline (submit + slo)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="engine: inject the seeded all-classes fault "
+                         "schedule (FaultPlan.chaos) and print the "
+                         "health/fault summary")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--weight-bits", type=int, default=4)

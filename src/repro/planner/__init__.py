@@ -21,8 +21,8 @@ from .enumerate import (LayerSpec, conv1d_spec, conv2d_spec,
                         plan_to_dict)
 from .cost import (CostBreakdown, PlanChoice, choose_plan, default_plan_for,
                    route_for, score_plan)
-from .autotune import (PlanCache, autotune_layer, default_cache_path,
-                       timing_key, timing_shortlist)
+from .autotune import (PlanCache, PlanCacheCorrupt, autotune_layer,
+                       default_cache_path, timing_key, timing_shortlist)
 from .network import (PLAN_POLICIES, arch_layer_specs, describe_plan,
                       format_plan_table, plan_arch, plan_differs_from_default,
                       plan_layers, plan_ultranet, ultranet_layer_specs)
@@ -33,7 +33,8 @@ __all__ = [
     "plan_to_dict", "plan_from_dict",
     "CostBreakdown", "PlanChoice", "score_plan", "route_for",
     "choose_plan", "default_plan_for",
-    "PlanCache", "autotune_layer", "default_cache_path",
+    "PlanCache", "PlanCacheCorrupt", "autotune_layer",
+    "default_cache_path",
     "timing_key", "timing_shortlist",
     "PLAN_POLICIES", "plan_layers", "plan_ultranet", "plan_arch",
     "ultranet_layer_specs", "arch_layer_specs", "format_plan_table",

@@ -46,6 +46,14 @@ CACHE_VERSION = 1
 _ENV_VAR = "REPRO_PLAN_CACHE"
 
 
+class PlanCacheCorrupt(RuntimeError):
+    """A plan-cache file exists but cannot be used (torn write, junk
+    bytes, wrong schema/version).  ``PlanCache.load(strict=True)``
+    raises this; the default (lenient) load starts fresh instead, and
+    the serving engine demotes ``plan_policy="cache"`` to ``"auto"``
+    with a warning (DESIGN.md §5 failure modes)."""
+
+
 def default_cache_path() -> str:
     return os.environ.get(_ENV_VAR, ".repro_plan_cache.json")
 
@@ -74,23 +82,42 @@ class PlanCache:
     entries: Dict[str, dict] = dataclasses.field(default_factory=dict)
 
     @classmethod
-    def load(cls, path: Optional[str] = None) -> "PlanCache":
+    def load(cls, path: Optional[str] = None,
+             strict: bool = False) -> "PlanCache":
+        """Load the cache file.  A corrupt/unreadable/wrong-schema
+        file starts fresh by default; ``strict=True`` raises
+        ``PlanCacheCorrupt`` instead (the engine's probe — it falls
+        back to ``plan_policy="auto"`` rather than serving against a
+        cache it cannot trust)."""
         path = path or default_cache_path()
         entries: Dict[str, dict] = {}
         if os.path.exists(path):
             try:
                 with open(path) as f:
                     payload = json.load(f)
-                if payload.get("version") == CACHE_VERSION:
-                    entries = dict(payload.get("entries", {}))
-            except (OSError, ValueError):
+                if not isinstance(payload, dict):
+                    raise ValueError("payload is not a JSON object")
+                if payload.get("version") != CACHE_VERSION:
+                    raise ValueError(
+                        f"cache version {payload.get('version')!r} != "
+                        f"{CACHE_VERSION}")
+                raw = payload.get("entries", {})
+                if not isinstance(raw, dict):
+                    raise ValueError("entries is not a JSON object")
+                entries = dict(raw)
+            except (OSError, ValueError) as e:
+                if strict:
+                    raise PlanCacheCorrupt(f"{path}: {e}") from e
                 entries = {}       # corrupt cache: start fresh
         return cls(path=path, entries=entries)
 
     def save(self) -> None:
-        with open(self.path, "w") as f:
-            json.dump({"version": CACHE_VERSION, "entries": self.entries},
-                      f, indent=1, sort_keys=True)
+        # atomic tmp+rename: a ctrl-C mid-persist (the loadgen/autotune
+        # exit path) must never leave a torn cache for the next run
+        from repro.ioutil import atomic_write_json
+        atomic_write_json(
+            self.path, {"version": CACHE_VERSION, "entries": self.entries},
+            indent=1, sort_keys=True)
 
     def get_choice(self, layer: LayerSpec,
                    backend: Optional[str] = None,
@@ -99,7 +126,13 @@ class PlanCache:
         entry = self.entries.get(key)
         if entry is None:
             return None
-        plan = plan_from_dict(entry["plan"])
+        try:
+            plan = plan_from_dict(entry["plan"])
+        except (KeyError, TypeError, ValueError):
+            # malformed entry (hand-edited / partially-written cache):
+            # drop it and re-plan rather than crash the consumer
+            self.entries.pop(key, None)
+            return None
         cost = score_plan(layer, plan, use_kernel)
         # Route-staleness validation only makes sense against THIS
         # process's routing — an entry keyed for another backend cannot

@@ -1,4 +1,5 @@
-"""Online inference engine: planner-bucketed packed decode.
+"""Online inference engine: planner-bucketed packed decode with
+layered fault tolerance.
 
 The engine owns the path from "a request arrived" to "planner-chosen
 packed kernels execute at high occupancy":
@@ -16,39 +17,78 @@ packed kernels execute at high occupancy":
     requests free their slot mid-wave (the wave ends early once every
     session left).  Mid-wave *joins* are structurally impossible with
     the repo's shared-position cache (one scalar ``index`` per cache
-    pytree — a joiner's prompt would land at a nonzero position and
-    break bit-exactness), so admission happens at wave boundaries
-    only; per-slot position tracking is the next scaling PR
-    (DESIGN.md §5).
-  * backpressure: past the queue's hard budget ``submit`` raises
-    ``Backpressure`` (recorded in metrics) instead of queueing
-    unbounded work.
+    pytree), so admission happens at wave boundaries only; per-slot
+    position tracking is the next scaling PR (DESIGN.md §5).
+
+Failure is a *bucket-local* event, never process death (the kernel
+dispatch's kernel-route → ref-route layering, lifted to the engine):
+
+  * **circuit breaker** — each bucket carries a health state
+    (``healthy → quarantined → probing → healthy``).
+    ``breaker_threshold`` consecutive wave/warmup failures quarantine
+    the bucket: its queued requests re-route to the nearest healthy
+    bucket (``batcher.enqueue``) or, when only quarantined shapes
+    fit, to the engine's degraded single-request fallback state
+    (uniform default plans — no planner, no cache — the most robust
+    configuration).  After ``breaker_cooldown_s`` the bucket turns
+    ``probing``: it re-enters assignment and its next wave is the
+    probe — success restores ``healthy``, failure re-quarantines.
+    A wave that fails mid-flight keeps the completions it already
+    produced and re-queues the unfinished requests (decode is
+    deterministic, so a retried request yields bit-identical tokens).
+  * **deadline shedding + admission control** — expired queued
+    requests are shed with a ``deadline_exceeded`` outcome before
+    burning a wave slot; ``submit`` rejects deadlines that cannot
+    survive one estimated wave (``DeadlineInfeasible``).
+  * **plan-cache degradation** — a corrupt/unreadable plan cache
+    demotes ``plan_policy="cache"`` to ``"auto"`` with a warning
+    instead of raising.
+  * **terminal outcomes** — every admitted request ends in exactly
+    one of ``ok | shed | failed`` (``Engine.outcomes``); rejected
+    submissions never enter the ledger.  Zero lost requests is an
+    invariant the chaos harness (``tests/test_chaos.py``) sweeps.
+  * **drain / recovery** — ``drain()`` finishes queued work without
+    admitting (``EngineDraining``); ``snapshot()``/``restore()``
+    round-trip the queue + rid state through JSON so a restarted
+    engine resumes exactly where the old one stopped.
 
 Plan-policy default (ROADMAP calibration item): when a plan-cache
-file is present the engine defaults to ``plan_policy="cache"`` — the
-autotuned wall-clock tie-breaking is exercised on the serving path —
+file is present the engine defaults to ``plan_policy="cache"`` —
 falling back to ``"auto"`` when there is no cache to consult
-(``default_plan_policy``).
+(``default_plan_policy``) or the cache is corrupt.
 
 Latency accounting syncs with ``jax.block_until_ready`` inside the
-timed loop (the understated-latency bug class fixed in
-``kernelbench._t``): a completion's latency includes queue wait, all
-decode steps, and device sync.
+timed loop: a completion's latency includes queue wait, all decode
+steps, retries after injected/real faults, and device sync.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .queue import (Backpressure, BucketShape, ContinuousBatcher, Request,
+from .faults import FaultPlan, InjectedFault, WaveFaults
+from .queue import (Backpressure, BucketShape, BucketUnavailable,
+                    ContinuousBatcher, DeadlineInfeasible, Request,
                     default_buckets)
 from .metrics import EngineMetrics, packed_utilization
 
 PLAN_POLICIES = ("default", "auto", "cache")
+
+#: per-bucket health states (the circuit breaker, DESIGN.md §5)
+HEALTH_STATES = ("healthy", "quarantined", "probing")
+
+#: the bucket-state key of the degraded single-request fallback shape
+FALLBACK_KEY = "fallback"
+
+
+class EngineDraining(Backpressure):
+    """Raised by ``submit`` while the engine drains (or after a
+    closing drain): in-flight work finishes, nothing new is admitted."""
 
 
 def default_plan_policy(plan_cache: Optional[str] = None) -> str:
@@ -103,6 +143,12 @@ class SessionTable:
         self._slots[slot] = None
         return s
 
+    def clear(self) -> List[Session]:
+        """Evict every active session (a failed wave's reset path)."""
+        out = [s for s in self._slots if s is not None]
+        self._slots = [None] * len(self._slots)
+        return out
+
     def active(self) -> List[Tuple[int, Session]]:
         return [(i, s) for i, s in enumerate(self._slots) if s is not None]
 
@@ -138,6 +184,9 @@ class _BucketState:
     sessions: SessionTable
     warmed: bool = False
     step_s: float = 0.0             # EMA of one decode step's wall clock
+    health: str = "healthy"         # circuit breaker state
+    fail_streak: int = 0            # consecutive wave/warmup failures
+    quarantined_until: float = 0.0  # cooldown expiry (engine clock)
 
 
 class Engine:
@@ -153,6 +202,9 @@ class Engine:
                  clock: Callable[[], float] = time.monotonic,
                  queue_budget: int = 64,
                  flush_budget: Optional[int] = None,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 2.0,
+                 faults: Optional[FaultPlan] = None,
                  min_size: int = 1024, pad_token: int = 0):
         import jax
 
@@ -168,24 +220,47 @@ class Engine:
         self.pad_token = pad_token
         self.clock = clock
         self.plan_cache = plan_cache
-        if compute != "sdv":
-            # memory packing has no lane plans to choose
-            self.plan_policy = "default"
-        elif plan_policy is None:
-            self.plan_policy = default_plan_policy(plan_cache)
-        else:
-            if plan_policy not in PLAN_POLICIES:
-                raise ValueError(f"unknown plan policy {plan_policy!r}")
-            self.plan_policy = plan_policy
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown_s = breaker_cooldown_s
+        self.faults = faults
+        self.plan_policy = self._resolve_plan_policy(compute, plan_policy,
+                                                     plan_cache)
         self.buckets = tuple(buckets) if buckets else default_buckets()
         self.batcher = ContinuousBatcher(
             self.buckets, clock=clock, queue_budget=queue_budget,
             flush_budget=flush_budget)
         self.metrics = EngineMetrics(clock=clock)
         self.completions: List[Completion] = []
+        #: rid -> {"outcome": "ok"|"shed"|"failed", "detail": str} —
+        #: every admitted request reaches exactly ONE terminal outcome
+        self.outcomes: Dict[int, Dict[str, str]] = {}
+        self._fallback_pending: List[Request] = []
+        self._admitting = True
         self._states: Dict[str, _BucketState] = {}
         self._qparams_by_rows: Dict[int, Any] = {}
         self._dec = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+
+    @staticmethod
+    def _resolve_plan_policy(compute: str, plan_policy: Optional[str],
+                             plan_cache: Optional[str]) -> str:
+        if compute != "sdv":
+            # memory packing has no lane plans to choose
+            return "default"
+        if plan_policy is not None and plan_policy not in PLAN_POLICIES:
+            raise ValueError(f"unknown plan policy {plan_policy!r}")
+        policy = plan_policy or default_plan_policy(plan_cache)
+        if policy == "cache":
+            # degrade, don't die: a corrupt/unreadable cache file must
+            # not take the engine down — re-plan analytically instead
+            from repro.planner import PlanCache, PlanCacheCorrupt
+            try:
+                PlanCache.load(plan_cache, strict=True)
+            except PlanCacheCorrupt as e:
+                warnings.warn(
+                    f"plan cache unusable ({e}); falling back to "
+                    f"plan_policy='auto'", stacklevel=3)
+                policy = "auto"
+        return policy
 
     # -- plan resolution / warmup -----------------------------------------
 
@@ -203,29 +278,74 @@ class Engine:
                 rows=rows)
         return self._qparams_by_rows[rows]
 
-    def _state(self, bucket: BucketShape) -> _BucketState:
+    def _make_state(self, bucket: BucketShape, qparams: Any
+                    ) -> _BucketState:
         from repro.models import init_cache, values, Rules
+        rules = Rules(tp=None, fsdp=None, ep=None, batch=())
+        return _BucketState(
+            bucket=bucket, qparams=qparams,
+            cache0=values(init_cache(self.cfg, rules, bucket.batch,
+                                     bucket.s_max)),
+            sessions=SessionTable(bucket.batch))
+
+    def _state(self, bucket: BucketShape) -> _BucketState:
         st = self._states.get(bucket.key)
         if st is None:
-            rules = Rules(tp=None, fsdp=None, ep=None, batch=())
-            st = _BucketState(
-                bucket=bucket,
-                qparams=self._qparams(bucket.batch),
-                cache0=values(init_cache(self.cfg, rules, bucket.batch,
-                                         bucket.s_max)),
-                sessions=SessionTable(bucket.batch))
+            st = self._make_state(bucket, self._qparams(bucket.batch))
+            self._states[bucket.key] = st
+        elif st.qparams is None:
+            # a stub left by a failed plan resolution (see
+            # ``_on_wave_failure``): retry the build — the cooldown
+            # probe repairs transient resolution failures
+            repaired = self._make_state(bucket,
+                                        self._qparams(bucket.batch))
+            repaired.health = st.health
+            repaired.fail_streak = st.fail_streak
+            repaired.quarantined_until = st.quarantined_until
+            st = repaired
             self._states[bucket.key] = st
         return st
 
-    def warmup(self, bucket: BucketShape) -> _BucketState:
+    def _fallback_state(self) -> _BucketState:
+        """The degraded single-request execution shape: batch 1 at the
+        largest bucket capacity, packed with the *uniform default*
+        plans — no planner search, no plan cache, the most robust
+        configuration (and still bit-exact: lane plans change packing
+        layout, never arithmetic)."""
+        st = self._states.get(FALLBACK_KEY)
+        if st is None:
+            from repro.models import serve_params
+            shape = BucketShape(1, max(b.s_max for b in self.buckets))
+            try:
+                qp = serve_params(
+                    self.params, bits=self.weight_bits,
+                    min_size=self.min_size, compute=self.compute,
+                    act_bits=self.act_bits,
+                    conv_bseg=(self.compute == "sdv"
+                               and self.conv_datapath == "bseg"),
+                    plan_policy="default", rows=1)
+            except Exception:           # no default plan for these bits:
+                qp = serve_params(      # memory packing always exists
+                    self.params, bits=self.weight_bits,
+                    min_size=self.min_size, compute="memory")
+            st = self._make_state(shape, qp)
+            self._states[FALLBACK_KEY] = st
+        return st
+
+    def warmup(self, bucket: BucketShape, *,
+               inject: bool = True) -> _BucketState:
         """Compile the bucket's decode step and record its packed-
-        multiply utilization; idempotent."""
+        multiply utilization; idempotent.  May raise (injected compile
+        faults, real compile errors) — ``_run_wave`` turns that into a
+        breaker event instead of process death."""
         import jax
         import jax.numpy as jnp
         st = self._state(bucket)
         if st.warmed:
             return st
-        toks = jnp.full((bucket.batch, 1), self.pad_token, jnp.int32)
+        if inject and self.faults is not None:
+            self.faults.maybe_fail_compile(bucket.key)
+        toks = jnp.full((st.bucket.batch, 1), self.pad_token, jnp.int32)
         logits, _ = self._dec(st.qparams, st.cache0, toks)   # compile
         jax.block_until_ready(logits)
         t0 = self.clock()
@@ -233,19 +353,36 @@ class Engine:
         jax.block_until_ready(logits)
         st.step_s = max(self.clock() - t0, 1e-9)
         st.warmed = True
-        util = packed_utilization(st.qparams, bucket.batch)
+        util = packed_utilization(st.qparams, st.bucket.batch)
         self.metrics.set_bucket_utilization(
             bucket.key, {k: v for k, v in util.items() if k != "layers"})
         return st
+
+    def prewarm_fallback(self) -> None:
+        """Build and compile the degraded fallback path ahead of
+        traffic.  The fallback is the last line of defense during a
+        bucket outage — paying its JIT compile in the middle of one
+        would stall the queue past every deadline, so startup is the
+        time to compile it.  Faults are never injected here."""
+        st = self._fallback_state()
+        if not st.warmed:
+            self._warm_state(st)
 
     def plan_report(self) -> Dict[str, Any]:
         """Per-bucket plan resolution: utilization + per-layer routes
         (use_kernel=True — the datapath routes the plans land on)."""
         return {key: packed_utilization(st.qparams, st.bucket.batch)
-                for key, st in sorted(self._states.items())}
+                for key, st in sorted(self._states.items())
+                if key != FALLBACK_KEY and st.qparams is not None}
+
+    def bucket_health(self) -> Dict[str, str]:
+        """Circuit-breaker state per warmed/known bucket."""
+        return {key: st.health for key, st in sorted(self._states.items())
+                if key != FALLBACK_KEY}
 
     def _est_wave_s(self) -> float:
-        warmed = [st for st in self._states.values() if st.warmed]
+        warmed = [st for key, st in self._states.items()
+                  if st.warmed and key != FALLBACK_KEY]
         if not warmed:
             return 0.0
         return max(st.step_s * (st.bucket.s_max - 1) for st in warmed)
@@ -255,49 +392,213 @@ class Engine:
     def submit(self, prompt: Sequence[int], new_tokens: int,
                deadline: Optional[float] = None,
                submit_t: Optional[float] = None) -> int:
-        """Enqueue a request; returns its rid.  Raises ``Backpressure``
-        at the hard queue budget (recorded), ``ValueError`` when no
-        bucket shape can ever run it.  ``submit_t`` back-dates the
-        latency clock to the request's true arrival time (load
-        generators submitting after a wave held the loop)."""
-        req = Request(prompt=tuple(prompt), new_tokens=new_tokens,
-                      deadline=deadline, submit_t=submit_t)
+        """Enqueue a request; returns its rid.  Raises
+        ``EngineDraining`` after/while a closing drain,
+        ``ValueError`` on malformed or never-fittable requests,
+        ``DeadlineInfeasible`` when the deadline cannot survive one
+        estimated wave, ``Backpressure`` at the hard queue budget (all
+        recorded).  ``submit_t`` back-dates the latency clock to the
+        request's true arrival time (load generators submitting after
+        a wave held the loop)."""
+        if not self._admitting:
+            raise EngineDraining("engine is draining: not admitting")
+        # admission must see *current* health: a cooldown that expired
+        # while a long wave held the loop reinstates its bucket now,
+        # not at the next step() — else a submission burst right after
+        # the wave would all re-route past a bucket that is ready to
+        # probe (and the probe would never happen)
+        self._tick_breakers()
         try:
-            self.batcher.submit(req)
+            req = Request(prompt=tuple(prompt) if prompt is not None
+                          else (), new_tokens=new_tokens,
+                          deadline=deadline, submit_t=submit_t)
+        except (TypeError, ValueError) as e:
+            self.metrics.record_malformed()
+            raise ValueError(f"malformed request: {e}") from e
+        try:
+            self.batcher.submit(req, est_wave_s=self._est_wave_s())
+        except BucketUnavailable:
+            # fits only a quarantined bucket: degraded fallback path
+            if self.depth() >= self.batcher.queue_budget:
+                self.metrics.record_rejection()
+                raise Backpressure(
+                    f"queue at budget ({self.batcher.queue_budget})")
+            self.batcher.stamp(req)
+            self._fallback_pending.append(req)
+            self.metrics.record_reroute()
+        except DeadlineInfeasible:
+            self.metrics.record_rejection(infeasible=True)
+            raise
         except Backpressure:
             self.metrics.record_rejection()
             raise
         return req.rid
 
     def depth(self) -> int:
-        return self.batcher.depth()
+        return self.batcher.depth() + len(self._fallback_pending)
+
+    # -- terminal outcomes -------------------------------------------------
+
+    def _set_outcome(self, rid: int, outcome: str, detail: str = ""
+                     ) -> None:
+        assert rid not in self.outcomes, \
+            (rid, outcome, self.outcomes[rid])       # exactly once
+        self.outcomes[rid] = {"outcome": outcome, "detail": detail}
+
+    def _shed(self, requests: List[Request]) -> None:
+        for r in requests:
+            self._set_outcome(r.rid, "shed", "deadline_exceeded")
+            self.metrics.record_shed()
+
+    def _shed_expired(self) -> None:
+        self._shed(self.batcher.shed_expired())
+        now = self.clock()
+        keep: List[Request] = []
+        expired: List[Request] = []
+        for r in self._fallback_pending:
+            tr = r.time_remaining(now)
+            (expired if tr is not None and tr <= 0 else keep).append(r)
+        self._fallback_pending = keep
+        self._shed(expired)
+
+    # -- circuit breaker ---------------------------------------------------
+
+    def _tick_breakers(self) -> None:
+        """Cooldown expiry: quarantined buckets turn ``probing`` and
+        re-enter assignment — their next wave is the probe."""
+        now = self.clock()
+        for st in self._states.values():
+            if st.health == "quarantined" and now >= st.quarantined_until:
+                st.health = "probing"
+                self.batcher.reinstate(st.bucket)
+
+    def _reroute(self, request: Request) -> None:
+        """Re-admit an already-admitted request after its bucket
+        failed: nearest healthy bucket, else the fallback path.  The
+        request is never dropped."""
+        self.metrics.record_reroute()
+        try:
+            self.batcher.enqueue(request)
+        except (BucketUnavailable, ValueError):
+            self._fallback_pending.append(request)
+
+    def _on_wave_failure(self, bucket: BucketShape, error: Exception,
+                         unfinished: List[Request]) -> None:
+        st = self._states.get(bucket.key)
+        if st is None:
+            # plan resolution itself failed: track breaker state on a
+            # stub; ``_state`` retries the build on the cooldown probe
+            st = _BucketState(bucket=bucket, qparams=None, cache0=None,
+                              sessions=SessionTable(bucket.batch))
+            self._states[bucket.key] = st
+        kind = getattr(error, "kind", type(error).__name__)
+        st.fail_streak += 1
+        self.metrics.record_wave_failure(bucket.key, kind)
+        failed_probe = st.health == "probing"
+        if failed_probe or st.fail_streak >= self.breaker_threshold:
+            st.health = "quarantined"
+            st.quarantined_until = self.clock() + self.breaker_cooldown_s
+            self.metrics.record_quarantine(bucket.key)
+            drained = self.batcher.quarantine(bucket)
+            for r in list(unfinished) + drained:
+                self._reroute(r)
+        else:
+            # below threshold: retry in place (oldest-first by rid)
+            for r in unfinished:
+                self.batcher.enqueue(r)
+
+    def _on_wave_success(self, bucket: BucketShape) -> None:
+        st = self._states[bucket.key]
+        st.fail_streak = 0
+        if st.health == "probing":
+            st.health = "healthy"
+            self.metrics.record_recovery(bucket.key)
 
     # -- execution ---------------------------------------------------------
 
     def step(self, force: bool = False) -> List[Completion]:
-        """Run at most one wave: pull a ready batch (``force=True``
-        flushes a partial bucket — the drain path) and decode it to
-        completion.  Returns the wave's completions (empty when no
-        flush rule fired)."""
-        self.metrics.sample_depth(self.batcher.depth())
+        """Run at most one wave: shed expired requests, pull a ready
+        batch (``force=True`` flushes a partial bucket — the drain
+        path) and decode it to completion; when no bucket flushes,
+        serve one degraded-fallback request if any is pending.
+        Returns the wave's completions."""
+        self.metrics.sample_depth(self.depth())
+        self._tick_breakers()
+        self._shed_expired()
         got = self.batcher.ready(est_wave_s=self._est_wave_s(),
                                  force=force)
-        if got is None:
-            return []
-        bucket, requests = got
-        return self._run_wave(bucket, requests)
+        if got is not None:
+            return self._run_wave(*got)
+        if self._fallback_pending:
+            return self._run_fallback(self._fallback_pending.pop(0))
+        return []
 
-    def drain(self) -> List[Completion]:
-        out: List[Completion] = []
-        while self.batcher.depth():
-            out.extend(self.step(force=True))
-        return out
+    def drain(self, close: bool = False) -> List[Completion]:
+        """Finish every queued request without admitting new ones
+        (``submit`` raises ``EngineDraining`` meanwhile); ``close=True``
+        keeps admission shut afterwards — the shutdown/snapshot path."""
+        was_admitting = self._admitting
+        self._admitting = False
+        try:
+            out: List[Completion] = []
+            while self.depth():
+                out.extend(self.step(force=True))
+            return out
+        finally:
+            self._admitting = was_admitting and not close
 
-    def _run_wave(self, bucket: BucketShape,
-                  requests: List[Request]) -> List[Completion]:
+    # -- snapshot / restore (engine restart with zero lost requests) ------
+
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-able queue + session-table snapshot.  Waves run to
+        completion synchronously, so between ``step()`` calls the only
+        engine-held requests are queued ones — the snapshot captures
+        them all, plus the rid watermark so a restarted engine never
+        reuses an old rid."""
+        queued = (self.batcher.snapshot_requests()
+                  + list(self._fallback_pending))
+        queued.sort(key=lambda r: r.rid)
+        return {
+            "version": 1,
+            "next_rid": self.batcher._next_rid,
+            "requests": [r.to_dict() for r in queued],
+            "outcomes": {str(rid): dict(o)
+                         for rid, o in sorted(self.outcomes.items())},
+        }
+
+    def restore(self, snap: Dict[str, Any]) -> int:
+        """Re-admit a snapshot's queued requests (rid, submit_t and
+        deadline preserved — latency accounting spans the restart).
+        Returns the number of restored requests."""
+        if snap.get("version") != 1:
+            raise ValueError(f"unknown snapshot version "
+                             f"{snap.get('version')!r}")
+        self.batcher._next_rid = max(self.batcher._next_rid,
+                                     int(snap["next_rid"]))
+        n = 0
+        for d in snap["requests"]:
+            req = Request.from_dict(d)
+            try:
+                self.batcher.enqueue(req)
+            except (BucketUnavailable, ValueError):
+                self._fallback_pending.append(req)
+            n += 1
+        return n
+
+    # -- wave execution ----------------------------------------------------
+
+    def _decode_wave(self, st: _BucketState, requests: List[Request], *,
+                     inject: bool
+                     ) -> Tuple[List[Completion], List[Request],
+                                Optional[Exception]]:
+        """Run one wave on ``st``; returns (completions, unfinished
+        requests, error).  On error the session table is reset and the
+        unfinished requests (tokens discarded — decode is
+        deterministic, a retry reproduces them) are handed back;
+        completions that finished before the fault are kept."""
         import jax
         import jax.numpy as jnp
-        st = self.warmup(bucket)
+        bucket = st.bucket
         self.metrics.record_start()
         table = st.sessions
         start_t = self.clock()
@@ -311,43 +612,103 @@ class Engine:
         cache = st.cache0                       # reused across waves
         max_steps = max(s.prompt_len - 1 + s.request.new_tokens
                         for _, s in table.active())
+        wf = self.faults.begin_wave(bucket.key, max_steps) \
+            if (inject and self.faults is not None) else WaveFaults()
         completions: List[Completion] = []
         steps = 0
         t0 = self.clock()
-        for i in range(max_steps):
-            logits, cache = self._dec(st.qparams, cache,
-                                      jnp.asarray(toks))
-            # sync INSIDE the timed loop: per-step wall clock and
-            # completion latencies must include device time
-            jax.block_until_ready(logits)
-            steps += 1
-            last = np.asarray(logits[:, -1, :vocab])
-            nxt = np.full((b, 1), self.pad_token, np.int32)
-            finish_t = self.clock()
-            for slot, s in table.active():
-                if i + 1 < s.prompt_len:        # teacher-force the prompt
-                    nxt[slot, 0] = s.request.prompt[i + 1]
-                    continue
-                tok = int(last[slot].argmax())
-                s.tokens.append(tok)
-                nxt[slot, 0] = tok
-                if s.done():                    # leave mid-wave: free slot
-                    table.leave(slot)
-                    comp = Completion(
-                        rid=s.request.rid, tokens=tuple(s.tokens),
-                        prompt_len=s.prompt_len, bucket_key=bucket.key,
-                        submit_t=s.request.submit_t, start_t=s.start_t,
-                        finish_t=finish_t, deadline=s.request.deadline)
-                    completions.append(comp)
-                    self.metrics.record_completion(
-                        submit_t=comp.submit_t, start_t=comp.start_t,
-                        finish_t=comp.finish_t, n_tokens=len(comp.tokens))
-            if not table.active():              # everyone left: end early
-                break
-            toks = nxt
-        wall = max(self.clock() - t0, 1e-9)
+        try:
+            for i in range(max_steps):
+                if wf.fail_at_step is not None and i == wf.fail_at_step:
+                    raise InjectedFault(
+                        "kernel_loss", f"{bucket.key} step {i}")
+                logits, cache = self._dec(st.qparams, cache,
+                                          jnp.asarray(toks))
+                # sync INSIDE the timed loop: per-step wall clock and
+                # completion latencies must include device time
+                jax.block_until_ready(logits)
+                steps += 1
+                last = np.asarray(logits[:, -1, :vocab])
+                nxt = np.full((b, 1), self.pad_token, np.int32)
+                finish_t = self.clock()
+                for slot, s in table.active():
+                    if i + 1 < s.prompt_len:    # teacher-force the prompt
+                        nxt[slot, 0] = s.request.prompt[i + 1]
+                        continue
+                    tok = int(last[slot].argmax())
+                    s.tokens.append(tok)
+                    nxt[slot, 0] = tok
+                    if s.done():                # leave mid-wave: free slot
+                        table.leave(slot)
+                        comp = Completion(
+                            rid=s.request.rid, tokens=tuple(s.tokens),
+                            prompt_len=s.prompt_len,
+                            bucket_key=bucket.key,
+                            submit_t=s.request.submit_t,
+                            start_t=s.start_t, finish_t=finish_t,
+                            deadline=s.request.deadline)
+                        completions.append(comp)
+                        self._set_outcome(comp.rid, "ok", bucket.key)
+                        self.metrics.record_completion(
+                            submit_t=comp.submit_t, start_t=comp.start_t,
+                            finish_t=comp.finish_t,
+                            n_tokens=len(comp.tokens))
+                if not table.active():          # everyone left: end early
+                    break
+                toks = nxt
+        except Exception as e:                  # bucket-local, not fatal
+            unfinished = [s.request for s in table.clear()]
+            return completions, unfinished, e
+        # slow-wave fault: the wall clock reads skewed/slow, inflating
+        # the step EMA -> est_wave_s -> shedding + admission pressure
+        wall = max(self.clock() - t0, 1e-9) + wf.skew_s
         st.step_s = 0.5 * st.step_s + 0.5 * (wall / steps)   # EMA
         self.metrics.record_wave(bucket.key, steps=steps, wall_s=wall,
                                  requests=len(requests))
+        return completions, [], None
+
+    def _run_wave(self, bucket: BucketShape,
+                  requests: List[Request]) -> List[Completion]:
+        try:
+            st = self.warmup(bucket)
+        except Exception as e:                  # compile failure: breaker
+            self._on_wave_failure(bucket, e, requests)
+            return []
+        completions, unfinished, err = self._decode_wave(
+            st, requests, inject=True)
+        if err is not None:
+            self._on_wave_failure(bucket, err, unfinished)
+        else:
+            self._on_wave_success(bucket)
         self.completions.extend(completions)
         return completions
+
+    def _run_fallback(self, request: Request) -> List[Completion]:
+        """Serve one request on the degraded single-request state.
+        This is the last line of defense: faults are not injected
+        here, and a failure is the request's terminal ``failed``
+        outcome — never an engine crash."""
+        try:
+            st = self._fallback_state()
+            if not st.warmed:
+                self._warm_state(st)
+            completions, unfinished, err = self._decode_wave(
+                st, [request], inject=False)
+        except Exception as e:                  # even setup may fail
+            completions, unfinished, err = [], [request], e
+        if err is not None:
+            for r in unfinished:
+                self._set_outcome(r.rid, "failed", str(err))
+                self.metrics.record_failed()
+        else:
+            self.metrics.record_fallback_wave()
+        self.completions.extend(completions)
+        return completions
+
+    def _warm_state(self, st: _BucketState) -> None:
+        import jax
+        import jax.numpy as jnp
+        toks = jnp.full((st.bucket.batch, 1), self.pad_token, jnp.int32)
+        logits, _ = self._dec(st.qparams, st.cache0, toks)
+        jax.block_until_ready(logits)
+        st.warmed = True

@@ -1,35 +1,59 @@
 """Load generator for the serving engine: Poisson open-loop and
-closed-loop drivers, and the ``BENCH_5.json`` writer.
+closed-loop drivers, the ``BENCH_5.json`` writer, and the chaos /
+fault-tolerance sweep (``BENCH_7.json``).
 
 Open loop (``--mode poisson``): request arrivals are a seeded Poisson
 process at ``--rates`` requests/s for ``--duration`` seconds; prompt
 lengths and decode budgets vary per request (seeded), so the batcher
 sees genuinely heterogeneous traffic.  Arrivals that hit backpressure
-are counted and dropped (an open-loop client does not retry).  Closed
-loop (``--mode closed``): ``--users`` concurrent clients, each
+are retried with seeded exponential backoff up to ``--retries`` times
+(``retries=0`` is the classic drop-on-backpressure open loop);
+``DeadlineInfeasible`` is never retried — the engine's admission
+control already proved the deadline hopeless.  Every offered request
+ends in exactly one client-side terminal outcome:
+
+  ``ok``        completed (tokens returned);
+  ``shed``      admitted, then deadline-shed by the engine;
+  ``rejected``  never admitted (backpressure retries exhausted,
+                infeasible deadline, or unfittable);
+  ``failed``    admitted, then terminally failed (fallback died too).
+
+An admitted rid missing from ``engine.outcomes`` after the drain is a
+**lost** request — the invariant the chaos harness sweeps is
+``lost_requests == 0`` under every fault class.
+
+Chaos mode (``--chaos``) injects a seeded ``FaultPlan`` into the
+engine and the driver (extra malformed submissions ride along with —
+never replace — the normal stream, so traffic is bit-identical with
+and without faults) and emits the ``BENCH_7.json`` payload: one point
+without faults, one with, each recording p99 / tokens-per-second /
+shed-rate / lost-requests / quarantine-recovery counts.
+
+Closed loop (``--mode closed``): ``--users`` concurrent clients, each
 submitting its next request the moment the previous one completes —
 the throughput-saturation view.
 
-``main`` sweeps arrival rate x compute mode (packed ``sdv`` vs
-``memory``) and writes one JSON payload with a latency/throughput
-curve point per (compute, rate) plus the sdv engine's per-bucket plan
-resolution — the CI smoke validates the schema and that at least one
-bucket resolved onto a packed kernel route.
-
   PYTHONPATH=src python -m repro.serving.loadgen --arch tinyllama-1.1b \
       --smoke --rates 30,90 --duration 1.0 --json BENCH_5.json
+  PYTHONPATH=src python -m repro.serving.loadgen --arch tinyllama-1.1b \
+      --smoke --chaos --json BENCH_7.json
 """
 from __future__ import annotations
 
 import argparse
-import json
+import heapq
+import os
+import tempfile
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from .engine import Backpressure, Engine, PLAN_POLICIES
-from .queue import BucketShape
+from .faults import FAULT_CLASSES, FaultPlan, corrupt_json_file
+from .metrics import write_snapshot
+from .queue import BucketShape, DeadlineInfeasible
 
 
 def poisson_arrivals(rate_per_s: float, duration_s: float,
@@ -60,46 +84,101 @@ def run_poisson(engine: Engine, *, rate: float, duration_s: float,
                 prompt_len: int, new_tokens: int,
                 rng: np.random.Generator,
                 slo_s: Optional[float] = None,
+                retries: int = 0, backoff_s: float = 0.01,
+                faults: Optional[FaultPlan] = None,
                 sleep=time.sleep) -> Dict[str, Any]:
     """Drive one engine with a Poisson arrival process; returns the
-    metrics snapshot after the queue fully drains."""
+    metrics snapshot (plus the client-side outcome ledger) after the
+    queue fully drains.
+
+    Arrivals and specs are pre-drawn from ``rng`` before any
+    fault-plan draw, so the offered traffic is bit-identical with and
+    without ``faults``; malformed chaos submissions are *extra*
+    requests on top of the stream, not replacements.  The latency
+    clock of every submission — including retried ones — runs from the
+    request's *scheduled arrival*, not from whenever a wave let this
+    loop run or a retry finally got admitted: a busy engine cannot
+    hide its own queueing delay (coordinated omission).
+    """
     vocab = engine.cfg.vocab
     arrivals = poisson_arrivals(rate, duration_s, rng)
     specs = _request_specs(len(arrivals), vocab, prompt_len, new_tokens,
                            rng)
     t0 = engine.clock()
-    i = 0
+    # submission events: (due, tiebreak, request index, attempt)
+    events = [(at, i, i, 0) for i, at in enumerate(arrivals)]
+    heapq.heapify(events)
+    seq = len(arrivals)
+    outcomes: Dict[int, str] = {}       # client-side terminal outcome
+    admitted: Dict[int, int] = {}       # request index -> engine rid
     unfittable = 0
-    while i < len(arrivals) or engine.depth():
+    retried = 0
+    malformed_sent = 0
+    while events or engine.depth():
         now = engine.clock() - t0
-        while i < len(arrivals) and arrivals[i] <= now:
-            prompt, nt = specs[i]
-            # latency and deadline run from the *scheduled arrival*,
-            # not from whenever a wave let this loop submit — else a
-            # busy engine hides its own queueing delay (coordinated
-            # omission)
-            arrived = t0 + arrivals[i]
+        while events and events[0][0] <= now:
+            _, _, idx, attempt = heapq.heappop(events)
+            prompt, nt = specs[idx]
+            if attempt == 0 and faults is not None \
+                    and faults.draw_malformed():
+                # chaos: an EXTRA malformed submission rides along
+                bad_prompt, bad_nt = faults.malformed_request(vocab)
+                malformed_sent += 1
+                try:
+                    engine.submit(bad_prompt, bad_nt)
+                except (ValueError, Backpressure):
+                    pass                # rejected cleanly — the point
+            # latency and deadline run from the *scheduled arrival*
+            arrived = t0 + arrivals[idx]
             try:
-                engine.submit(prompt, nt, submit_t=arrived,
-                              deadline=(arrived + slo_s) if slo_s
-                              else None)
+                admitted[idx] = engine.submit(
+                    prompt, nt, submit_t=arrived,
+                    deadline=(arrived + slo_s) if slo_s else None)
+            except DeadlineInfeasible:  # admission control: no retry
+                outcomes[idx] = "rejected"
             except Backpressure:
-                pass                    # open loop: counted + dropped
-            except ValueError:          # no bucket fits: shed, note it
+                if attempt < retries:   # seeded exponential backoff
+                    delay = backoff_s * (2 ** attempt) \
+                        * (1.0 + float(rng.random()))
+                    heapq.heappush(events,
+                                   (now + delay, seq, idx, attempt + 1))
+                    seq += 1
+                    retried += 1
+                else:
+                    outcomes[idx] = "rejected"
+            except ValueError:          # no bucket could ever fit it
                 unfittable += 1
-            i += 1
+                outcomes[idx] = "rejected"
         if engine.step():
             continue
-        if i < len(arrivals):           # idle until the next arrival
-            wait = arrivals[i] - (engine.clock() - t0)
+        if events:                      # idle until the next event
+            wait = events[0][0] - (engine.clock() - t0)
             if wait > 0:
                 sleep(min(wait, 5e-3))
         elif engine.depth():
             engine.step(force=True)     # tail drain: partial buckets
+    # resolve admitted requests against the engine's outcome ledger;
+    # an admitted rid with no terminal outcome was LOST (must be 0)
+    lost = 0
+    for idx, rid in admitted.items():
+        o = engine.outcomes.get(rid)
+        if o is None:
+            lost += 1
+            outcomes[idx] = "lost"
+        else:
+            outcomes[idx] = o["outcome"]
+    counts = {"ok": 0, "shed": 0, "rejected": 0, "failed": 0, "lost": 0}
+    for o in outcomes.values():
+        counts[o] += 1
     snap = engine.metrics.snapshot()
     snap["offered_requests"] = len(arrivals)
     snap["offered_rate_per_s"] = rate
     snap["unfittable_requests"] = unfittable
+    snap["client_outcomes"] = counts
+    snap["lost_requests"] = lost
+    snap["retried_submissions"] = retried
+    snap["malformed_submitted"] = malformed_sent
+    snap["bucket_health"] = engine.bucket_health()
     return snap
 
 
@@ -141,7 +220,7 @@ def bench_serving(arch: str, *, smoke: bool, rates: Sequence[float],
                   plan_policy: Optional[str], plan_cache: Optional[str],
                   slo_ms: Optional[float], seed: int,
                   mode: str = "poisson", users: int = 8,
-                  rounds: int = 2) -> Dict[str, Any]:
+                  rounds: int = 2, retries: int = 0) -> Dict[str, Any]:
     import jax
 
     from repro.configs.registry import get_arch
@@ -176,7 +255,7 @@ def bench_serving(arch: str, *, smoke: bool, rates: Sequence[float],
                                    prompt_len=prompt_len,
                                    new_tokens=new_tokens, rng=rng,
                                    slo_s=(slo_ms / 1e3) if slo_ms
-                                   else None)
+                                   else None, retries=retries)
             curves.append({"compute": compute, "rate_per_s": rate,
                            **snap})
             if compute == "sdv":
@@ -201,6 +280,123 @@ def bench_serving(arch: str, *, smoke: bool, rates: Sequence[float],
         "new_tokens": new_tokens,
         "curves": curves,
         "bucket_plans": bucket_plans,
+    }
+
+
+# ---------------------------------------------------------------------------
+# the BENCH_7 chaos sweep (fault tolerance)
+# ---------------------------------------------------------------------------
+
+def bench_fault_tolerance(arch: str, *, smoke: bool = True,
+                          rate: float = 60.0, duration_s: float = 1.0,
+                          prompt_len: int = 8, new_tokens: int = 8,
+                          batch: int = 4, s_maxes: Sequence[int] = (24, 48),
+                          weight_bits: int = 4, act_bits: int = 8,
+                          slo_ms: float = 4000.0, seed: int = 0,
+                          fault_classes: Sequence[str] = FAULT_CLASSES,
+                          retries: int = 3, backoff_s: float = 0.01,
+                          breaker_threshold: int = 2,
+                          breaker_cooldown_s: float = 0.2
+                          ) -> Dict[str, Any]:
+    """Identical seeded Poisson traffic with and without an injected
+    ``FaultPlan.chaos`` schedule; each point records p99 latency,
+    tokens/s, shed rate, lost requests (the zero-loss invariant) and
+    quarantine/recovery counts.  The chaos engine's buckets are
+    deliberately NOT prewarmed — the first wave per bucket is where
+    ``compile_fail`` injections land, exercising the circuit breaker
+    end to end (only the degraded fallback path is compiled up front,
+    as a real deployment would); the
+    ``plan_cache_corrupt`` class garbles a throwaway cache file and
+    asserts the engine demoted ``plan_policy="cache"`` to ``"auto"``
+    instead of dying."""
+    import jax
+
+    from repro.configs.registry import get_arch
+    from repro.models import init_params, values, Rules
+
+    cfg = get_arch(arch)
+    if smoke:
+        cfg = cfg.reduced()
+    rules = Rules(tp=None, fsdp=None, ep=None, batch=())
+    params = values(init_params(cfg, rules, jax.random.PRNGKey(0)))
+    buckets = tuple(BucketShape(batch, s) for s in s_maxes)
+
+    points: List[Dict[str, Any]] = []
+    fault_log: Dict[str, int] = {}
+    for with_faults in (False, True):
+        faults = FaultPlan.chaos(seed, fault_classes) if with_faults \
+            else None
+        plan_policy: Optional[str] = None
+        plan_cache: Optional[str] = None
+        cache_demoted = False
+        with tempfile.TemporaryDirectory() as td:
+            if faults is not None and faults.corrupt_plan_cache:
+                plan_cache = os.path.join(td, "plans.json")
+                with open(plan_cache, "w") as f:
+                    f.write('{"version": 1, "entries": {}}')
+                corrupt_json_file(plan_cache, seed)
+                plan_policy = "cache"
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                engine = Engine(cfg, params, compute="sdv",
+                                weight_bits=weight_bits,
+                                act_bits=act_bits,
+                                plan_policy=plan_policy,
+                                plan_cache=plan_cache, buckets=buckets,
+                                breaker_threshold=breaker_threshold,
+                                breaker_cooldown_s=breaker_cooldown_s,
+                                faults=faults)
+            if plan_policy == "cache":
+                cache_demoted = engine.plan_policy == "auto" \
+                    and any("plan cache unusable" in str(w.message)
+                            for w in caught)
+            if faults is None:
+                for b in buckets:       # fault-free baseline: steady
+                    engine.warmup(b)    # state, compile not charged
+            else:
+                # the chaos engine's buckets stay cold (compile_fail
+                # lands in their first warmup) but its last line of
+                # defense is compiled now — a fallback that JITs in
+                # the middle of an outage sheds the whole backlog
+                engine.prewarm_fallback()
+            snap = run_poisson(
+                engine, rate=rate, duration_s=duration_s,
+                prompt_len=prompt_len, new_tokens=new_tokens,
+                rng=np.random.default_rng(seed),    # same traffic
+                slo_s=slo_ms / 1e3, retries=retries,
+                backoff_s=backoff_s, faults=faults)
+        if faults is not None:
+            fault_log = faults.counts()
+        points.append({
+            **snap,
+            # the metrics snapshot's own "faults" sub-dict moves to
+            # "fault_counters"; "faults" here is the point's flag
+            "fault_counters": snap["faults"],
+            "faults": with_faults,
+            "p99_ms": snap["latency"]["p99_ms"],
+            "tokens_per_s": snap["tokens_per_s"],
+            "shed_rate": snap["shed_rate"],
+            "lost_requests": snap["lost_requests"],
+            "quarantines": snap["faults"]["quarantines"],
+            "recoveries": snap["faults"]["recoveries"],
+            "plan_cache_demoted": cache_demoted,
+        })
+
+    return {
+        "bench": "fault_tolerance",
+        "pr": 7,
+        "arch": cfg.name,
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "buckets": [{"batch": b.batch, "s_max": b.s_max} for b in buckets],
+        "rate_per_s": rate,
+        "duration_s": duration_s,
+        "slo_ms": slo_ms,
+        "seed": seed,
+        "fault_classes": list(fault_classes),
+        "fault_injections": fault_log,
+        "retries": retries,
+        "points": points,
     }
 
 
@@ -235,38 +431,72 @@ def main(argv=None):
     ap.add_argument("--plan-cache", default=None)
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request deadline (submit + slo)")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="backpressure retries per request (seeded "
+                         "exponential backoff)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-tolerance sweep: identical traffic with "
+                         "and without injected faults (BENCH_7)")
+    ap.add_argument("--fault-classes", default=",".join(FAULT_CLASSES),
+                    help="comma-separated chaos fault classes")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None,
-                    help="write the payload to this path")
+                    help="write the payload to this path (atomic)")
     args = ap.parse_args(argv)
 
-    payload = bench_serving(
-        args.arch, smoke=args.smoke,
-        rates=[float(r) for r in args.rates.split(",") if r],
-        duration_s=args.duration,
-        computes=[c for c in args.computes.split(",") if c],
-        prompt_len=args.prompt_len, new_tokens=args.new_tokens,
-        batch=args.batch,
-        s_maxes=[int(s) for s in args.buckets.split(",") if s],
-        weight_bits=args.weight_bits, act_bits=args.act_bits,
-        plan_policy=args.plan_policy, plan_cache=args.plan_cache,
-        slo_ms=args.slo_ms, seed=args.seed, mode=args.mode,
-        users=args.users, rounds=args.rounds)
+    if args.chaos:
+        payload = bench_fault_tolerance(
+            args.arch, smoke=args.smoke,
+            rate=[float(r) for r in args.rates.split(",") if r][0],
+            duration_s=args.duration,
+            prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+            batch=args.batch,
+            s_maxes=[int(s) for s in args.buckets.split(",") if s],
+            weight_bits=args.weight_bits, act_bits=args.act_bits,
+            slo_ms=args.slo_ms if args.slo_ms else 4000.0,
+            seed=args.seed,
+            fault_classes=[c for c in args.fault_classes.split(",") if c],
+            retries=args.retries or 3)
+        for p in payload["points"]:
+            tag = "chaos " if p["faults"] else "clean "
+            print(f"{tag}@ {payload['rate_per_s']:6.1f} req/s: "
+                  f"{p['requests_completed']} done, "
+                  f"{p['client_outcomes']['shed']} shed, "
+                  f"{p['client_outcomes']['rejected']} rejected, "
+                  f"{p['lost_requests']} LOST, "
+                  f"p99 {p['p99_ms']:.1f} ms, "
+                  f"{p['tokens_per_s']:.1f} tok/s, "
+                  f"{p['quarantines']} quarantines / "
+                  f"{p['recoveries']} recoveries")
+        print(f"fault injections: {payload['fault_injections']}")
+    else:
+        payload = bench_serving(
+            args.arch, smoke=args.smoke,
+            rates=[float(r) for r in args.rates.split(",") if r],
+            duration_s=args.duration,
+            computes=[c for c in args.computes.split(",") if c],
+            prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+            batch=args.batch,
+            s_maxes=[int(s) for s in args.buckets.split(",") if s],
+            weight_bits=args.weight_bits, act_bits=args.act_bits,
+            plan_policy=args.plan_policy, plan_cache=args.plan_cache,
+            slo_ms=args.slo_ms, seed=args.seed, mode=args.mode,
+            users=args.users, rounds=args.rounds, retries=args.retries)
 
-    for c in payload["curves"]:
-        print(f"{c['compute']:>6} @ {c['rate_per_s']:6.1f} req/s: "
-              f"{c['requests_completed']} done, "
-              f"{c['requests_rejected']} shed, "
-              f"p50 {c['latency']['p50_ms']:.1f} ms, "
-              f"p99 {c['latency']['p99_ms']:.1f} ms, "
-              f"{c['tokens_per_s']:.1f} tok/s")
-    for key, util in payload["bucket_plans"].items():
-        print(f"bucket {key}: {util['kernel_routed_layers']}/"
-              f"{util['packed_layers']} packed layers on kernel routes, "
-              f"density {util['density_achieved']:.2f} MACs/multiply")
+        for c in payload["curves"]:
+            print(f"{c['compute']:>6} @ {c['rate_per_s']:6.1f} req/s: "
+                  f"{c['requests_completed']} done, "
+                  f"{c['requests_rejected']} shed, "
+                  f"p50 {c['latency']['p50_ms']:.1f} ms, "
+                  f"p99 {c['latency']['p99_ms']:.1f} ms, "
+                  f"{c['tokens_per_s']:.1f} tok/s")
+        for key, util in payload["bucket_plans"].items():
+            print(f"bucket {key}: {util['kernel_routed_layers']}/"
+                  f"{util['packed_layers']} packed layers on kernel "
+                  f"routes, density {util['density_achieved']:.2f} "
+                  f"MACs/multiply")
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
+        write_snapshot(args.json, payload)
         print(f"wrote {args.json}")
     return payload
 

@@ -1,5 +1,8 @@
-"""Serving metrics: latency percentiles, throughput, queue depth, and
-packed-multiply utilization, exported as one JSON-able snapshot.
+"""Serving metrics: latency percentiles, throughput, queue depth,
+fault-tolerance counters, and packed-multiply utilization, exported as
+one JSON-able snapshot (written atomically — ``write_snapshot`` uses
+the tmp+rename dance from ``repro.ioutil``, so a ctrl-C mid-benchmark
+can never leave a torn ``BENCH_*.json``).
 
 Latency is measured per request from ``submit`` to the step its last
 token came off the device (the engine syncs with
@@ -20,6 +23,14 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional
+
+from repro.ioutil import atomic_write_json
+
+
+def write_snapshot(path: str, payload: Any) -> None:
+    """Persist a JSON snapshot atomically (tmp file + ``os.replace``):
+    readers see the old payload or the new one, never a torn write."""
+    atomic_write_json(path, payload, indent=1, sort_keys=True)
 
 
 def percentile(sorted_vals: List[float], q: float) -> float:
@@ -150,6 +161,16 @@ class EngineMetrics:
     queue_wait_s: List[float] = dataclasses.field(default_factory=list)
     depth_samples: List[int] = dataclasses.field(default_factory=list)
     rejected: int = 0
+    rejected_infeasible: int = 0    # admission control: hopeless deadline
+    malformed: int = 0              # rejected at request validation
+    shed: int = 0                   # deadline_exceeded before a wave slot
+    failed: int = 0                 # terminal failure (fallback died too)
+    rerouted: int = 0               # re-admitted after a bucket failure
+    wave_failures: int = 0
+    failure_kinds: Dict[str, int] = dataclasses.field(default_factory=dict)
+    quarantines: int = 0
+    recoveries: int = 0
+    fallback_waves: int = 0
     tokens_out: int = 0
     waves: int = 0
     wave_steps: int = 0
@@ -184,8 +205,47 @@ class EngineMetrics:
         b["wall_s"] += wall_s
         b["requests"] += requests
 
-    def record_rejection(self) -> None:
+    def record_rejection(self, infeasible: bool = False) -> None:
         self.rejected += 1
+        if infeasible:
+            self.rejected_infeasible += 1
+
+    def record_malformed(self) -> None:
+        self.malformed += 1
+
+    def record_shed(self) -> None:
+        self.shed += 1
+
+    def record_failed(self) -> None:
+        self.failed += 1
+
+    def record_reroute(self) -> None:
+        self.rerouted += 1
+
+    def record_wave_failure(self, bucket_key: str, kind: str) -> None:
+        self.wave_failures += 1
+        self.failure_kinds[kind] = self.failure_kinds.get(kind, 0) + 1
+        b = self.per_bucket.setdefault(
+            bucket_key, {"waves": 0, "steps": 0, "wall_s": 0.0,
+                         "requests": 0})
+        b["failures"] = b.get("failures", 0) + 1
+
+    def record_quarantine(self, bucket_key: str) -> None:
+        self.quarantines += 1
+        b = self.per_bucket.setdefault(
+            bucket_key, {"waves": 0, "steps": 0, "wall_s": 0.0,
+                         "requests": 0})
+        b["quarantines"] = b.get("quarantines", 0) + 1
+
+    def record_recovery(self, bucket_key: str) -> None:
+        self.recoveries += 1
+        b = self.per_bucket.setdefault(
+            bucket_key, {"waves": 0, "steps": 0, "wall_s": 0.0,
+                         "requests": 0})
+        b["recoveries"] = b.get("recoveries", 0) + 1
+
+    def record_fallback_wave(self) -> None:
+        self.fallback_waves += 1
 
     def sample_depth(self, depth: int) -> None:
         self.depth_samples.append(depth)
@@ -202,9 +262,23 @@ class EngineMetrics:
         if self.started_t is not None and self.finished_t is not None:
             span = max(self.finished_t - self.started_t, 1e-9)
         depth = self.depth_samples
+        terminal = len(self.latencies_s) + self.shed + self.failed
         return {
             "requests_completed": len(self.latencies_s),
             "requests_rejected": self.rejected,
+            "rejected_infeasible": self.rejected_infeasible,
+            "requests_malformed": self.malformed,
+            "requests_shed": self.shed,
+            "requests_failed": self.failed,
+            "shed_rate": self.shed / terminal if terminal else 0.0,
+            "faults": {
+                "wave_failures": self.wave_failures,
+                "kinds": dict(sorted(self.failure_kinds.items())),
+                "quarantines": self.quarantines,
+                "recoveries": self.recoveries,
+                "rerouted": self.rerouted,
+                "fallback_waves": self.fallback_waves,
+            },
             "tokens_out": self.tokens_out,
             "tokens_per_s": self.tokens_out / span if span else 0.0,
             "latency": latency_summary(self.latencies_s),

@@ -7,6 +7,11 @@ layout):
     different slice shape (elastic scaling) just work;
   * atomic: write to ``<dir>/tmp.<step>`` then ``os.replace`` — a crash
     mid-write never corrupts the latest checkpoint;
+  * validated: ``meta.json`` records a sha256 of the leaf payload;
+    ``restore`` verifies it and raises the typed ``CheckpointCorrupt``
+    on any torn/garbled checkpoint instead of surfacing a random
+    pickle/JSON decode error (callers catch ONE exception to fall back
+    to the previous step);
   * async: ``save_async`` snapshots to host memory synchronously (cheap)
     and writes in a daemon thread, overlapping I/O with the next steps;
   * emergency: ``install_sigterm_handler`` flushes a final checkpoint on
@@ -15,6 +20,7 @@ layout):
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -29,6 +35,20 @@ import numpy as np
 # numpy's npz format cannot represent ml_dtypes extended types
 # (bfloat16 round-trips as void); store them as uint16 + a dtype tag.
 _EXT_DTYPES = {"bfloat16": jnp.bfloat16}
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint directory exists but fails validation (missing or
+    undecodable meta/leaves, checksum mismatch).  The one exception a
+    restore caller needs to catch to fall back to an older step."""
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _flat(tree):
@@ -65,7 +85,8 @@ def save(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict] = None,
     np.savez(os.path.join(tmp, "leaves.npz"),
              **{f"leaf_{i}": a for i, a in enumerate(host_leaves)})
     meta = {"step": step, "n_leaves": len(host_leaves),
-            "dtypes": dtypes, "extra": extra or {}}
+            "dtypes": dtypes, "extra": extra or {},
+            "checksum": _sha256(os.path.join(tmp, "leaves.npz"))}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
     if os.path.exists(final):
@@ -92,14 +113,40 @@ def restore(ckpt_dir: str, step: int, template: Any, *,
             shardings: Any = None):
     """Restore into the structure of ``template``; if ``shardings`` is
     given (tree of jax.sharding.Sharding), device_put leaves onto it —
-    this is where elastic resharding happens."""
+    this is where elastic resharding happens.
+
+    A *missing* checkpoint raises ``FileNotFoundError`` (absence is
+    not corruption); a *present-but-invalid* one — torn meta.json,
+    truncated/garbled leaves, checksum mismatch — raises the typed
+    ``CheckpointCorrupt``."""
     path = os.path.join(ckpt_dir, f"step_{step:09d}")
-    with open(os.path.join(path, "meta.json")) as f:
-        meta = json.load(f)
-    data = np.load(os.path.join(path, "leaves.npz"))
+    if not os.path.isdir(path):
+        raise FileNotFoundError(path)
+    leaves_path = os.path.join(path, "leaves.npz")
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        if not isinstance(meta, dict) or "n_leaves" not in meta:
+            raise ValueError("meta.json missing n_leaves")
+    except (OSError, ValueError) as e:
+        raise CheckpointCorrupt(f"{path}: bad meta.json: {e}") from e
+    want = meta.get("checksum")
+    if want is not None:
+        try:
+            got = _sha256(leaves_path)
+        except OSError as e:
+            raise CheckpointCorrupt(f"{path}: missing leaves: {e}") from e
+        if got != want:
+            raise CheckpointCorrupt(
+                f"{path}: leaves.npz checksum mismatch "
+                f"(want {want[:12]}…, got {got[:12]}…)")
     dtypes = meta.get("dtypes", [None] * meta["n_leaves"])
-    leaves = [_decode(data[f"leaf_{i}"], dtypes[i])
-              for i in range(meta["n_leaves"])]
+    try:
+        data = np.load(leaves_path)
+        leaves = [_decode(data[f"leaf_{i}"], dtypes[i])
+                  for i in range(meta["n_leaves"])]
+    except Exception as e:       # zipfile/KeyError/ValueError zoo
+        raise CheckpointCorrupt(f"{path}: bad leaves.npz: {e}") from e
     _, treedef = _flat(template)
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     if shardings is not None:

@@ -10,8 +10,10 @@ import numpy as np
 import pytest
 
 from repro.serving import (Backpressure, BucketShape, ContinuousBatcher,
-                           Request, bucket_for, default_plan_policy,
-                           latency_summary, packed_utilization)
+                           DeadlineInfeasible, Request, bucket_for,
+                           default_plan_policy, latency_summary,
+                           packed_utilization, time_remaining,
+                           write_snapshot)
 from repro.serving.engine import Engine, Session, SessionTable
 
 
@@ -115,6 +117,73 @@ def test_force_flush_breaks_bucket_ties():
         assert got is not None
         drained.append(got)
     assert sum(len(reqs) for _, reqs in drained) == 2
+
+
+def test_time_remaining_single_source():
+    """Flush heuristic, admission check, shedder and loadgen all
+    derive deadline slack from the one ``time_remaining`` function."""
+    assert time_remaining(None, 123.0) is None
+    assert time_remaining(10.0, 4.0) == 6.0
+    assert time_remaining(10.0, 11.5) == -1.5
+    r = Request((1, 2), 4, deadline=10.0)
+    assert r.time_remaining(4.0) == time_remaining(10.0, 4.0)
+    assert Request((1, 2), 4).time_remaining(4.0) is None
+
+
+def test_rejected_submit_leaves_batcher_unchanged():
+    """Every admission check runs before any state mutates: a rejected
+    submit must leave no phantom half-enqueued request, keep the rid
+    counter untouched, and leave the request unstamped."""
+    clock = FakeClock()
+    b = ContinuousBatcher(_buckets(), clock=clock, queue_budget=2)
+    b.submit(Request((1, 2), 4))
+    b.submit(Request((1, 2), 4))
+    before_rid = b._next_rid
+    before_pending = {k: list(q) for k, q in b._pending.items()}
+    # hard budget
+    r = Request((1, 2), 4)
+    with pytest.raises(Backpressure):
+        b.submit(r)
+    assert r.rid == -1 and r.submit_t is None     # never stamped
+    # infeasible deadline (checked before the budget mutation too)
+    r2 = Request((1, 2), 4, deadline=clock.t + 0.5)
+    with pytest.raises(DeadlineInfeasible):
+        b.submit(r2, est_wave_s=1.0)
+    assert r2.rid == -1 and r2.submit_t is None
+    assert b._next_rid == before_rid
+    assert {k: list(q) for k, q in b._pending.items()} == before_pending
+    assert b.depth() == 2
+
+
+def test_batcher_shed_expired_and_quarantine_hooks():
+    clock = FakeClock()
+    b = ContinuousBatcher(_buckets(), clock=clock)
+    live = b.submit(Request((1, 2), 4))
+    doomed = b.submit(Request((1, 2), 4, deadline=clock.t + 1.0))
+    clock.advance(2.0)
+    shed = b.shed_expired()
+    assert [r.rid for r in shed] == [doomed.rid]
+    assert b.depth() == 1
+    # quarantine drains the bucket's queue and blocks assignment:
+    # requests re-route to the nearest healthy shape
+    from repro.serving import BucketUnavailable
+    drained = b.quarantine(BucketShape(4, 16))
+    assert [r.rid for r in drained] == [live.rid]
+    rerouted = b.submit(Request((1, 2), 4))
+    assert bucket_for(rerouted, b.buckets,
+                      unavailable=b.quarantined()) == BucketShape(4, 32)
+    # with every fitting shape quarantined, submit surfaces
+    # BucketUnavailable (the engine's degraded path takes over)
+    b.quarantine(BucketShape(4, 32))
+    with pytest.raises(BucketUnavailable):
+        b.submit(Request((1, 2), 4))
+    assert b.quarantined() == (BucketShape(4, 16), BucketShape(4, 32))
+    b.reinstate(BucketShape(4, 16))
+    b.reinstate(BucketShape(4, 32))
+    assert b.quarantined() == ()
+    b.enqueue(live)                               # re-admit, rid kept
+    got = b.ready(force=True)
+    assert got is not None and got[1][0].rid == live.rid
 
 
 def test_loadgen_backdates_submit_to_arrival():
@@ -238,14 +307,25 @@ def test_engine_session_slots_cycle(tiny_engine, tiny_setup):
 
 
 def test_engine_backpressure_records_rejection(tiny_setup):
+    """Rejections are counted exactly once each, and a rejected submit
+    leaves the engine unchanged (no phantom request, queue depth and
+    rid watermark untouched) — Backpressure recovery is clean."""
     cfg, params = tiny_setup
     eng = Engine(cfg, params, compute="sdv",
                  buckets=(BucketShape(2, 16),), queue_budget=2)
     eng.submit((1, 2, 3), 2)
     eng.submit((1, 2, 3), 2)
+    depth, watermark = eng.depth(), eng.batcher._next_rid
     with pytest.raises(Backpressure):
         eng.submit((1, 2, 3), 2)
     assert eng.metrics.snapshot()["requests_rejected"] == 1
+    assert eng.depth() == depth
+    assert eng.batcher._next_rid == watermark
+    # recovery: the queue drains and the next submit is admitted
+    eng.drain()
+    rid = eng.submit((1, 2, 3), 2)
+    assert rid == watermark                     # no rid was burned
+    assert eng.metrics.snapshot()["requests_rejected"] == 1   # still 1
     eng.drain()
 
 
@@ -255,9 +335,15 @@ def test_engine_deadline_metadata(tiny_engine, tiny_setup):
     rid = eng.submit((1, 2, 3, 4), 2, deadline=eng.clock() + 60.0)
     comp = {c.rid: c for c in eng.drain()}[rid]
     assert comp.met_deadline
-    rid = eng.submit((1, 2, 3, 4), 2, deadline=eng.clock() - 1.0)
-    comp = {c.rid: c for c in eng.drain()}[rid]
-    assert not comp.met_deadline
+    assert eng.outcomes[rid] == {"outcome": "ok", "detail": "b4.s24"}
+    # an already-expired deadline is rejected at admission now
+    # (DeadlineInfeasible) — it can never be served in time, so it
+    # must not burn a wave slot (PR 7 semantics change)
+    before = eng.metrics.rejected_infeasible
+    with pytest.raises(DeadlineInfeasible):
+        eng.submit((1, 2, 3, 4), 2, deadline=eng.clock() - 1.0)
+    assert eng.metrics.rejected_infeasible == before + 1
+    assert eng.depth() == 0
 
 
 # ---------------------------------------------------------------------------
@@ -346,6 +432,17 @@ def test_stacked_sdv_packing_slices_under_scan(tiny_setup):
 # ---------------------------------------------------------------------------
 # loadgen + BENCH_5 schema
 # ---------------------------------------------------------------------------
+
+def test_write_snapshot_atomic(tmp_path):
+    """Snapshot writes go through tmp+rename: the final file is valid
+    JSON and no temp litter survives a successful write."""
+    path = tmp_path / "snap.json"
+    write_snapshot(str(path), {"b": 2, "a": [1, 2]})
+    assert json.loads(path.read_text()) == {"a": [1, 2], "b": 2}
+    write_snapshot(str(path), {"a": 1})          # overwrite in place
+    assert json.loads(path.read_text()) == {"a": 1}
+    assert [p.name for p in tmp_path.iterdir()] == ["snap.json"]
+
 
 def test_poisson_arrivals_seeded():
     from repro.serving.loadgen import poisson_arrivals

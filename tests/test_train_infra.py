@@ -44,6 +44,53 @@ def test_async_checkpointer(tmp_path):
     assert (np.asarray(got["x"]) == np.arange(8.0)).all()
 
 
+def test_checkpoint_corruption_detected(tmp_path):
+    """A truncated/garbled checkpoint raises the typed
+    ``CheckpointCorrupt`` (never a random zipfile/JSON error), a
+    missing one raises ``FileNotFoundError``, and the happy path
+    round-trips the recorded checksum."""
+    tree = {"a": jnp.arange(12.0).reshape(3, 4)}
+    path = checkpoint.save(str(tmp_path), 3, tree)
+    _, meta = checkpoint.restore(str(tmp_path), 3, tree)
+    assert meta["checksum"] == checkpoint._sha256(
+        os.path.join(path, "leaves.npz"))
+    with pytest.raises(FileNotFoundError):
+        checkpoint.restore(str(tmp_path), 99, tree)
+    # truncate the leaf payload: checksum mismatch -> CheckpointCorrupt
+    leaves = os.path.join(path, "leaves.npz")
+    data = open(leaves, "rb").read()
+    with open(leaves, "wb") as f:
+        f.write(data[: len(data) // 2])
+    with pytest.raises(checkpoint.CheckpointCorrupt, match="checksum"):
+        checkpoint.restore(str(tmp_path), 3, tree)
+    # garbled meta.json -> CheckpointCorrupt too
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        f.write('{"step": 3, "n_lea')
+    with pytest.raises(checkpoint.CheckpointCorrupt, match="meta"):
+        checkpoint.restore(str(tmp_path), 3, tree)
+
+
+def test_checkpoint_legacy_without_checksum(tmp_path):
+    """Pre-checksum checkpoints (no ``checksum`` in meta) still
+    restore — validation is opportunistic, not a format break — but a
+    *garbled* legacy payload still surfaces as ``CheckpointCorrupt``."""
+    import json
+    tree = {"a": jnp.arange(6.0)}
+    path = checkpoint.save(str(tmp_path), 1, tree)
+    meta_path = os.path.join(path, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["checksum"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    got, _ = checkpoint.restore(str(tmp_path), 1, tree)
+    assert (np.asarray(got["a"]) == np.arange(6.0)).all()
+    with open(os.path.join(path, "leaves.npz"), "wb") as f:
+        f.write(b"not a zip")
+    with pytest.raises(checkpoint.CheckpointCorrupt, match="leaves"):
+        checkpoint.restore(str(tmp_path), 1, tree)
+
+
 def test_data_determinism_and_restart():
     d1 = SyntheticLMData(vocab=100, seq_len=16, global_batch=4, seed=9)
     d2 = SyntheticLMData(vocab=100, seq_len=16, global_batch=4, seed=9)
