@@ -1,5 +1,6 @@
 .PHONY: test dev-deps planner-smoke planner-test test-datapaths \
-        test-wide-words serve-smoke test-serving chaos-smoke test-chaos
+        test-wide-words serve-smoke test-serving chaos-smoke test-chaos \
+        qat-smoke test-qat
 
 # tier-1 verify (ROADMAP.md): the whole suite, fail-fast, quiet
 test:
@@ -44,6 +45,18 @@ chaos-smoke:
 
 test-chaos:
 	PYTHONPATH=src python -m pytest -q tests/test_chaos.py
+
+# packed QAT: a short --qat launcher run (STE packed forward, bitwidth
+# search warming a plan cache, serving-ready export), and its test file
+qat-smoke:
+	PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+	    --smoke --steps 4 --seq 48 --global-batch 4 --microbatches 1 \
+	    --qat --w-bits 4 --a-bits 8 \
+	    --plan-cache $${TMPDIR:-/tmp}/qat_plans.json \
+	    --bitsearch $${TMPDIR:-/tmp}/bitsearch.json
+
+test-qat:
+	PYTHONPATH=src python -m pytest -q tests/test_qat.py
 
 dev-deps:
 	pip install -r requirements-dev.txt

@@ -177,4 +177,81 @@ assert any("n=3" in p and d == "dsp48e2" for p, d in plans), plans
 print(f"BENCH_6.json ok: {len(kern)} wide kernel rows, serving W4A8 "
       f"buckets on {sorted(plans)}")
 PY
+# qat smoke: a 2-step packed-STE run from float init on the tiny arch —
+# every wrapped layer must carry a planner-resolved plan, the export
+# must round-trip through serve_params onto SDV containers, and the
+# packed forward must match the integer-decode forward bitwise
+python - <<'PY'
+import jax, jax.numpy as jnp, numpy as np
+from repro.train.qat import ste
+from repro.train.qat.loop import QATRunConfig, run_qat, export_for_serving
+from repro.models.quantized import SDVLinear
+
+qcfg = QATRunConfig(steps=2, global_batch=2, seq=32, min_size=1 << 10,
+                    packed_forward=True, plan_policy="auto",
+                    eval_batches=1)
+res = run_qat(qcfg, log=lambda *_: None)
+assert res["qat_layers"] > 0 and all(np.isfinite(res["losses"]))
+
+def each_qat(t):
+    if ste.is_qat(t):
+        yield t
+    elif isinstance(t, dict):
+        for v in t.values():
+            yield from each_qat(v)
+
+wrapped = list(each_qat(res["params"]))
+assert all(w.plan is not None for w in wrapped), \
+    "packed_forward left a QAT layer plan-free"
+served = export_for_serving(qcfg, res["params"], plan_policy="auto")
+
+def count_sdv(t):
+    if isinstance(t, SDVLinear):
+        return 1
+    if isinstance(t, dict):
+        return sum(count_sdv(v) for v in t.values())
+    return 0
+
+n_sdv = count_sdv(served)
+assert n_sdv == res["qat_layers"], (n_sdv, res["qat_layers"])
+w = wrapped[0]
+x = jnp.asarray(np.random.default_rng(0).standard_normal(
+    (2, w.kernel.shape[-2])), jnp.float32)
+y_p = ste.ste_dense(x, w.kernel, w.w_bits, w.a_bits, w.plan, w.use_kernel)
+y_d = ste.ste_dense(x, w.kernel, w.w_bits, w.a_bits, None, False)
+assert np.array_equal(np.asarray(y_p).view(np.uint32),
+                      np.asarray(y_d).view(np.uint32))
+print(f"qat smoke ok: {res['qat_layers']} packed layers trained, "
+      f"export -> {n_sdv} SDV containers, packed==decode bitwise")
+PY
+# ... and the tracked BENCH_8 payload: QAT-vs-float eval gap, packed
+# vs decode step times, warm-cache serving with zero re-planning, and
+# the bit-exact packed gradient all-reduce
+python - BENCH_8.json <<'PY'
+import json, sys
+payload = json.load(open(sys.argv[1]))
+assert payload["bench"] == "qat" and payload["pr"] == 8
+q = payload["qat"]
+assert q["qat_layers"] > 0
+assert abs(q["eval_gap_vs_float_init"]) < 0.5, q
+for mode in ("packed", "decode"):
+    m = q["modes"][mode]
+    assert m["step_time_ms"]["median"] > 0, (mode, m)
+    assert all(l == l and abs(l) < 1e6 for l in m["losses"]), (mode, m)
+b = payload["bitsearch"]
+assert b["layers"] and b["kernel_routed"] is True, b
+c = payload["plan_cache"]
+assert c["policy"] == "cache", c
+assert c["cache_unchanged_after_warmup"] is True, \
+    "engine re-planned despite the bitsearch-warmed cache"
+assert all(u["kernel_routed_layers"] == u["packed_layers"] > 0
+           for u in c["bucket_plans"].values()), c
+g = payload["grad_compress"]
+assert g["packed_bit_exact_vs_unpacked"] is True, g
+assert g["wire_bytes_per_element"]["packed"] * 2 \
+    == g["wire_bytes_per_element"]["unpacked"], g
+print(f"BENCH_8.json ok: {q['qat_layers']} QAT layers, eval gap "
+      f"{q['eval_gap_vs_float_init']:+.4f}, cache-served buckets "
+      f"{sorted(c['bucket_plans'])}, packed grad AR exact")
+PY
 exec python -m pytest -x -q "$@"

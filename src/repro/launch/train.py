@@ -5,10 +5,18 @@ local device set (optionally multi-device via
 XLA_FLAGS=--xla_force_host_platform_device_count=N) with the full
 substrate: mesh + sharding rules, deterministic host-sharded data,
 AdamW (+8-bit moments), microbatching, async checkpointing with resume,
-straggler monitoring, SIGTERM emergency save.
+straggler monitoring, SIGTERM emergency save.  The step loop itself is
+``train/loop.run_training`` — device sync inside the timed region.
 
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
       --smoke --steps 50 --mesh 2,2
+
+``--qat`` switches to the packed QAT driver (``train/qat``): STE
+forward through the packed datapath, export to serving-ready params.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 20 --qat --w-bits 4 --a-bits 8 \
+      --plan-cache /tmp/qat_plans.json --export /tmp/qat_serve.ck
 """
 from __future__ import annotations
 
@@ -16,6 +24,44 @@ import argparse
 
 import jax
 import numpy as np
+
+
+def run_qat_main(args) -> None:
+    """--qat path: single-host packed QAT via ``train/qat/loop``."""
+    from repro.train import qat
+
+    qcfg = qat.QATRunConfig(
+        arch=args.arch, smoke=args.smoke, steps=args.steps,
+        global_batch=args.global_batch, seq=args.seq,
+        microbatches=args.microbatches,
+        w_bits=args.w_bits, a_bits=args.a_bits,
+        min_size=args.qat_min_size,
+        packed_forward=not args.float_forward,
+        plan_policy="cache" if args.plan_cache else "auto",
+        plan_cache=args.plan_cache or None,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        resume=args.resume)
+
+    precision = None
+    if args.bitsearch:
+        from repro.train.loop import init_run
+        cfg, _, params, _, _ = init_run(args.arch, smoke=args.smoke)
+        precision, report = qat.search_bitwidths(
+            params, min_size=args.qat_min_size,
+            cache_path=args.plan_cache or None)
+        qat.write_search_report(report, args.bitsearch,
+                                {"arch": cfg.name})
+        print(f"bitsearch: {len(report)} layers -> {args.bitsearch}")
+
+    res = qat.run_qat(qcfg, precision=precision)
+    print(f"qat: {res['qat_layers']} packed layers, "
+          f"eval {res['qat_eval']:.4f} "
+          f"(float init {res['float_eval_at_init']:.4f})")
+    if args.export:
+        from repro.train import checkpoint
+        served = qat.export_for_serving(qcfg, res["params"])
+        checkpoint.save(args.export, qcfg.steps, served)
+        print(f"exported serving params -> {args.export}")
 
 
 def main():
@@ -32,7 +78,26 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
+    # --- QAT mode ---
+    ap.add_argument("--qat", action="store_true",
+                    help="packed quantization-aware training")
+    ap.add_argument("--w-bits", type=int, default=4)
+    ap.add_argument("--a-bits", type=int, default=8)
+    ap.add_argument("--qat-min-size", type=int, default=1 << 10,
+                    help="smallest kernel (elements) to fake-quantize")
+    ap.add_argument("--float-forward", action="store_true",
+                    help="QAT with the unpacked integer-decode forward")
+    ap.add_argument("--plan-cache", default="",
+                    help="plan-cache JSON path (warmed by --bitsearch)")
+    ap.add_argument("--bitsearch", default="",
+                    help="run bitwidth search first; write report here")
+    ap.add_argument("--export", default="",
+                    help="checkpoint dir for serving-ready params")
     args = ap.parse_args()
+
+    if args.qat:
+        run_qat_main(args)
+        return
 
     from repro.configs.registry import get_arch
     from repro.data import SyntheticLMData
@@ -74,32 +139,31 @@ def main():
             print(f"resumed at step {start}")
 
     ck = checkpoint.AsyncCheckpointer(args.ckpt_dir)
-    mon = straggler.StepMonitor()
     state = {"pv": pv, "opt": opt, "step": start}
     checkpoint.install_sigterm_handler(
         lambda: (ck.wait(), checkpoint.save(
             args.ckpt_dir, state["step"], (state["pv"], state["opt"]))))
 
+    def place_batch(host):
+        shards = batch_shardings(mesh, rules, host)
+        return {k: jax.device_put(v, shards[k]) for k, v in host.items()}
+
+    def on_step(s, p, o, m, dt, mon):
+        state.update(pv=p, opt=o, step=s + 1)
+        if mon.should_mitigate:
+            print("[straggler] mitigation trigger")
+        if (s + 1) % args.ckpt_every == 0 or s + 1 == args.steps:
+            ck.save_async(s + 1, (p, o))
+        if (s + 1) % 10 == 0 or s == start:
+            print(f"step {s+1:4d} loss {float(m['loss']):.4f} "
+                  f"lr {float(m['lr']):.2e}")
+
     with mesh:
         with shard_ctx.use_rules(rules):
-            step_fn = jax.jit(loop.make_train_step(
-                cfg, ocfg, microbatches=args.microbatches))
-            for s in range(start, args.steps):
-                host = data.batch_at(s)
-                shards = batch_shardings(mesh, rules, host)
-                batch = {k: jax.device_put(v, shards[k])
-                         for k, v in host.items()}
-                mon.start()
-                pv, opt, m = step_fn(pv, opt, batch)
-                mon.stop()
-                state.update(pv=pv, opt=opt, step=s + 1)
-                if mon.should_mitigate:
-                    print("[straggler] mitigation trigger")
-                if (s + 1) % args.ckpt_every == 0 or s + 1 == args.steps:
-                    ck.save_async(s + 1, (pv, opt))
-                if (s + 1) % 10 == 0 or s == start:
-                    print(f"step {s+1:4d} loss {float(m['loss']):.4f} "
-                          f"lr {float(m['lr']):.2e}")
+            pv, opt, _, _ = loop.run_training(
+                cfg, ocfg, pv, opt, data, steps=args.steps, start=start,
+                microbatches=args.microbatches, place_batch=place_batch,
+                on_step=on_step)
     ck.wait()
 
 

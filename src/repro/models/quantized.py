@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.datapath import BSEGPlan, INT32, SDVPlan, plan_bseg, plan_sdv
+from repro.quant import quantizer
 
 
 @dataclasses.dataclass
@@ -73,12 +74,11 @@ jax.tree_util.register_dataclass(SDVLinear, data_fields=["words", "scale"],
 def pack_linear(kernel: jnp.ndarray, bits: int) -> PackedLinear:
     """kernel [..., d_in, d_out] float -> PackedLinear."""
     per = 32 // bits
-    qmax = (1 << (bits - 1)) - 1
     amax = jnp.max(jnp.abs(kernel.astype(jnp.float32)), axis=-2,
                    keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qmax
-    q = jnp.clip(jnp.round(kernel.astype(jnp.float32) / scale),
-                 -qmax, qmax).astype(jnp.int32)
+    scale = quantizer.symmetric_scale(amax, bits)
+    q = quantizer.symmetric_qvalues(kernel.astype(jnp.float32), scale,
+                                    bits).astype(jnp.int32)
     d_out = kernel.shape[-1]
     pad = (-d_out) % per
     if pad:
@@ -114,11 +114,10 @@ def pack_linear_sdv(kernel: jnp.ndarray, plan: SDVPlan) -> SDVLinear:
         return SDVLinear(words=jnp.stack([p.words for p in per]),
                          scale=jnp.stack([p.scale for p in per]),
                          plan=plan, d_out=kernel.shape[-1])
-    qmax = (1 << (plan.w_a - 1)) - 1
     kf = kernel.astype(jnp.float32)
     amax = jnp.max(jnp.abs(kf), axis=0)
-    scale = jnp.maximum(amax, 1e-8) / qmax
-    q = jnp.clip(jnp.round(kf / scale), -qmax, qmax).astype(jnp.int32)
+    scale = quantizer.symmetric_scale(amax, plan.w_a)
+    q = quantizer.symmetric_qvalues(kf, scale, plan.w_a).astype(jnp.int32)
     words = ops.prepare_sdv_weights(q.T, plan)               # [d_in, G]
     return SDVLinear(words=words, scale=scale.astype(jnp.float32),
                      plan=plan, d_out=kernel.shape[-1])
@@ -138,11 +137,10 @@ def sdv_matmul_apply(qw: SDVLinear, x: jnp.ndarray,
     from repro.kernels import ops
     if use_kernel is None:
         use_kernel = jax.default_backend() != "cpu"
-    qmax = (1 << (qw.plan.w_b - 1)) - 1
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    xs = jnp.maximum(amax, 1e-8) / qmax
-    xq = jnp.clip(jnp.round(xf / xs), -qmax, qmax).astype(jnp.int32)
+    xs = quantizer.symmetric_scale(amax, qw.plan.w_b)
+    xq = quantizer.symmetric_qvalues(xf, xs, qw.plan.w_b).astype(jnp.int32)
     y = ops.packed_matmul(xq, qw.words, plan=qw.plan, m=qw.d_out,
                           use_kernel=use_kernel)
     return (y.astype(jnp.float32) * xs * qw.scale[None, :]).astype(x.dtype)
@@ -185,11 +183,10 @@ def pack_conv_bseg(conv_params: dict, plan: BSEGPlan) -> BSEGConv:
     w, b = conv_params["w"], conv_params["b"]
     assert w.ndim in (2, 3), w.shape
     taps = w.shape[-1]
-    qmax = (1 << (plan.w_k - 1)) - 1
     wf = w.astype(jnp.float32)
     amax = jnp.max(jnp.abs(wf), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qmax
-    q = jnp.clip(jnp.round(wf / scale), -qmax, qmax).astype(jnp.int32)
+    scale = quantizer.symmetric_scale(amax, plan.w_k)
+    q = quantizer.symmetric_qvalues(wf, scale, plan.w_k).astype(jnp.int32)
     kappa, tap_sum = ops.prepare_bseg_taps(q.reshape(-1, taps), plan)
     if w.ndim == 3:                      # [L, C, taps] stacked blocks
         from repro.kernels import bseg_common
@@ -228,10 +225,9 @@ def bseg_conv_apply(qc: BSEGConv, x: jnp.ndarray, *,
     xf = xfull.astype(jnp.float32)
     lo = jnp.min(xf)
     hi = jnp.max(xf)
-    levels = (1 << qc.plan.w_i) - 1
-    xs = jnp.maximum(hi - lo, 1e-6) / levels
-    zp = 1 << (qc.plan.w_i - 1)
-    xq_u = jnp.clip(jnp.round((xf - lo) / xs), 0, levels)
+    xs = quantizer.asymmetric_scale(lo, hi, qc.plan.w_i)
+    zp = quantizer.asymmetric_zero_point(qc.plan.w_i)
+    xq_u = quantizer.asymmetric_qvalues(xf, lo, xs, qc.plan.w_i)
     xq = (xq_u - zp).astype(jnp.int8)            # signed datapath input
     y_int = ops.bseg_conv1d(xq, qc.kappa, qc.tap_sum, plan=qc.plan,
                             n_taps=taps, zero_point=zp, padding="causal",

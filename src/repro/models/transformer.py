@@ -300,6 +300,8 @@ def unembed_hidden(cfg: ArchConfig, params, h):
     """Project already-normed hidden states to logits (chunked loss)."""
     if cfg.tie_embeddings:
         logits = h @ params["embed"].astype(h.dtype).T
+    elif hasattr(params["lm_head"], "qat_apply"):
+        logits = params["lm_head"].qat_apply(h)   # QAT STE (train/qat)
     else:
         logits = h @ L.mat(params["lm_head"], h.dtype)
     return shard_ctx.constrain(logits.astype(jnp.float32),
@@ -310,6 +312,8 @@ def _unembed(cfg: ArchConfig, params, x):
     x = L.rmsnorm_apply(params["ln_f"], x)
     if cfg.tie_embeddings:
         logits = x @ params["embed"].astype(x.dtype).T
+    elif hasattr(params["lm_head"], "qat_apply"):
+        logits = params["lm_head"].qat_apply(x)   # QAT STE (train/qat)
     else:
         logits = x @ L.mat(params["lm_head"], x.dtype)
     return shard_ctx.constrain(logits.astype(jnp.float32),

@@ -1,7 +1,18 @@
 """Quantization substrate: symmetric per-channel integer quantization,
-QAT fake-quant, and the packed-weight container used by serving."""
-from .quantizer import (QuantizedTensor, dequantize, fake_quant,
-                        quantize_symmetric)
+QAT fake-quant, and the packed-weight container used by serving.
+
+``quantizer`` holds THE scale/zero-point rule — serving weight prep
+(``models/quantized.py``), QAT (``train/qat``) and the planner's
+bitwidth pricing all read it from here.
+"""
+from . import quantizer
+from .quantizer import (QuantizedTensor, asymmetric_qvalues,
+                        asymmetric_scale, asymmetric_zero_point,
+                        dequantize, fake_quant, quantize_symmetric,
+                        symmetric_qmax, symmetric_qvalues,
+                        symmetric_scale)
 
 __all__ = ["QuantizedTensor", "dequantize", "fake_quant",
-           "quantize_symmetric"]
+           "quantize_symmetric", "quantizer", "symmetric_qmax",
+           "symmetric_qvalues", "symmetric_scale", "asymmetric_qvalues",
+           "asymmetric_scale", "asymmetric_zero_point"]

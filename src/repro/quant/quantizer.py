@@ -1,9 +1,24 @@
 """Symmetric per-channel quantization (the FINN-style fixed-point model).
 
-``quantize_symmetric`` maps a float tensor to w-bit signed integers with
-a per-channel scale:  x ≈ q * scale,  q in [-2^(w-1)+1, 2^(w-1)-1]
-(symmetric range keeps the packed datapaths' worst-case analysis tight —
-the paper's Eqs. 9/10 assume the full signed range, so we stay inside).
+THE single quantization rule.  Every path that maps floats onto the
+packed integer datapaths — QAT fake-quant (``train/qat/ste.py``),
+serving weight prep (``models/quantized.py``), the planner's
+``LayerSpec`` bitwidth pricing — reads the scale/clip/round rule from
+here, so the three can be pinned bit-identical by a single regression
+test (``tests/test_qat.py::test_three_path_quantization_identity``).
+
+Two rules exist:
+
+  * signed symmetric (weights, SDV matmul activations):
+        qmax  = 2^(bits-1) - 1
+        scale = max(amax, 1e-8) / qmax
+        q     = clip(round(x / scale), -qmax, qmax)
+    (symmetric range keeps the packed datapaths' worst-case analysis
+    tight — the paper's Eqs. 9/10 assume the full signed range, so we
+    stay inside).
+  * unsigned asymmetric (BSEG conv activations, Eqs. 9/10 unsigned
+    domain): ``levels = 2^bits - 1``, ``scale = max(hi-lo, 1e-6) /
+    levels``, zero point ``2^(bits-1)``.
 
 ``fake_quant`` is the straight-through-estimator form used for QAT.
 """
@@ -15,6 +30,57 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+
+# ---------------------------------------------------------------------------
+# the rule (shared helpers)
+# ---------------------------------------------------------------------------
+
+def symmetric_qmax(bits: int) -> int:
+    """Largest magnitude of a ``bits``-wide symmetric signed value."""
+    return (1 << (bits - 1)) - 1
+
+
+def symmetric_scale(amax: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-channel dequantization scale from the abs-max statistic."""
+    return jnp.maximum(amax, 1e-8) / symmetric_qmax(bits)
+
+
+def symmetric_qvalues(x: jnp.ndarray, scale: jnp.ndarray,
+                      bits: int) -> jnp.ndarray:
+    """Round-and-clip ``x / scale`` into the symmetric signed range.
+
+    Returns float values holding exact integers in [-qmax, qmax];
+    callers pick the container dtype (int8 for storage, int32 for the
+    packed datapath input)."""
+    qmax = symmetric_qmax(bits)
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax)
+
+
+def asymmetric_levels(bits: int) -> int:
+    """Number of steps of the unsigned ``bits``-wide domain."""
+    return (1 << bits) - 1
+
+
+def asymmetric_zero_point(bits: int) -> int:
+    """The mid-domain zero point (Eqs. 9/10 signed-to-unsigned shift)."""
+    return 1 << (bits - 1)
+
+
+def asymmetric_scale(lo: jnp.ndarray, hi: jnp.ndarray,
+                     bits: int) -> jnp.ndarray:
+    """Step size of the unsigned asymmetric (min/max) rule."""
+    return jnp.maximum(hi - lo, 1e-6) / asymmetric_levels(bits)
+
+
+def asymmetric_qvalues(x: jnp.ndarray, lo: jnp.ndarray,
+                       scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Round-and-clip into the unsigned [0, 2^bits) domain."""
+    return jnp.clip(jnp.round((x - lo) / scale), 0, asymmetric_levels(bits))
+
+
+# ---------------------------------------------------------------------------
+# containers
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class QuantizedTensor:
@@ -34,13 +100,12 @@ jax.tree_util.register_dataclass(
 def quantize_symmetric(x: jnp.ndarray, bits: int, *,
                        axis: Optional[int] = -1) -> QuantizedTensor:
     """Per-channel symmetric quantization along ``axis`` (None: per-tensor)."""
-    qmax = (1 << (bits - 1)) - 1
     if axis is None:
         amax = jnp.max(jnp.abs(x))
     else:
         amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qmax
-    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    scale = symmetric_scale(amax, bits)
+    q = symmetric_qvalues(x, scale, bits).astype(jnp.int8)
     return QuantizedTensor(values=q, scale=scale.astype(jnp.float32),
                            bits=bits)
 

@@ -36,7 +36,10 @@ class Q8(NamedTuple):
 def _q8(x: jnp.ndarray) -> Q8:
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
     scale = jnp.maximum(amax, 1e-12) / 127.0
-    return Q8(jnp.round(x / scale).astype(jnp.int8), scale.astype(jnp.float32))
+    # clip before the int8 cast: float division can nudge amax/scale a
+    # hair past 127, and astype wraps rather than saturates
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return Q8(q.astype(jnp.int8), scale.astype(jnp.float32))
 
 
 def _dq8(t: Q8) -> jnp.ndarray:

@@ -1,0 +1,376 @@
+"""Straight-through-estimator layers on the packed datapath.
+
+The QAT forward must see EXACTLY the arithmetic the serving containers
+will run — same quantization rule (``quant/quantizer.py``), same exact
+integer GEMM/conv, same dequantization order — or the trained network
+and the served network silently diverge.  Three pieces:
+
+  * ``ste_dense`` / ``ste_conv2d``: ``jax.custom_vjp`` layers whose
+    *forward* quantizes weights (per-output-channel symmetric) and
+    activations (per-row symmetric for GEMM; min/max asymmetric
+    unsigned for conv, Eqs. 9/10) with the shared rule, runs the exact
+    integer correlation through ``kernels/ops.packed_matmul`` /
+    ``packed_conv2d`` on a planner-chosen plan, and dequantizes — and
+    whose *backward* flows through the float STE surrogate (gradients
+    of ``fq(x) @ fq(w)`` with straight-through quantizers).  Because
+    every packed route returns the exact int32 correlation and the
+    scaling ops are identical elementwise, the packed forward is
+    bit-exact against the plain integer-decode forward on every
+    enumerable plan (``tests/test_qat.py``).
+  * ``QATLinear``: a registered-dataclass container holding the float
+    master kernel (data field — gradients flow to it) plus the
+    bitwidths and plan (meta).  ``models/layers.dense_apply``
+    duck-dispatches on ``qat_apply``, so ``forward``/``loss_fn`` run
+    QAT unchanged; a scanned layer stack keeps its leading layer axis
+    on the kernel and ``lax.scan`` slices it back off.
+  * ``qat_params``: mirrors ``serve_params``'s walk (same leaf names,
+    same stacked-container rules) wrapping each packable kernel in a
+    ``QATLinear`` — the training-time twin of the serving rewrite, so
+    QAT trains precisely the layer set that will later pack.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.datapath import BSEGPlan, SDVPlan
+from repro.quant import quantizer
+
+
+def _use_kernel_default(use_kernel: Optional[bool]) -> bool:
+    # Pallas on TPU, the pure-jnp packed decode on CPU (interpret mode
+    # is for tests, not the training hot loop) — same rule as
+    # models/quantized.sdv_matmul_apply.
+    if use_kernel is None:
+        return jax.default_backend() != "cpu"
+    return use_kernel
+
+
+# ---------------------------------------------------------------------------
+# shared-rule quantizers (the exact statistics serving uses)
+# ---------------------------------------------------------------------------
+
+def quantize_weights(kernel: jnp.ndarray, w_bits: int):
+    """[d_in, d_out] float -> (q int32 [d_in, d_out], scale f32 [d_out]).
+
+    Per-output-channel symmetric — identical statistics to
+    ``models/quantized.pack_linear_sdv`` (amax over the reduction
+    axis)."""
+    kf = kernel.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(kf), axis=0)
+    scale = quantizer.symmetric_scale(amax, w_bits)
+    q = quantizer.symmetric_qvalues(kf, scale, w_bits).astype(jnp.int32)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_acts(x: jnp.ndarray, a_bits: int):
+    """[..., K] float -> (q int32, scale f32 [..., 1]) — per-row
+    symmetric, identical to the serving container's dynamic activation
+    quantization."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    xs = quantizer.symmetric_scale(amax, a_bits)
+    xq = quantizer.symmetric_qvalues(xf, xs, a_bits).astype(jnp.int32)
+    return xq, xs
+
+
+# ---------------------------------------------------------------------------
+# STE dense (SDV GEMM datapath)
+# ---------------------------------------------------------------------------
+
+def _dense_int_forward(x, kernel, w_bits, a_bits, plan, use_kernel):
+    """The integer-decode forward both modes share: exact int32 GEMM
+    of the quantized operands, dequantized by the two scales.  With a
+    plan the GEMM runs through the ``packed_matmul`` dispatch (SDV
+    words on the plan's datapath); without one it is the plain int32
+    reference product — bit-exact either way, because every packed
+    route returns the exact correlation."""
+    from repro.kernels import ops
+    xq, xs = quantize_acts(x, a_bits)
+    qw, sw = quantize_weights(kernel, w_bits)
+    if plan is not None:
+        words = ops.prepare_sdv_weights(qw.T, plan)
+        y_int = ops.packed_matmul(xq, words, plan=plan,
+                                  m=kernel.shape[-1],
+                                  use_kernel=use_kernel)
+    else:
+        y_int = jnp.matmul(xq, qw)
+    y = y_int.astype(jnp.float32) * xs * sw[None, :]
+    # fake-quant float tensors for the STE surrogate gradient
+    x_fq = xq.astype(jnp.float32) * xs
+    w_fq = qw.astype(jnp.float32) * sw[None, :]
+    return y, x_fq, w_fq
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def ste_dense(x: jnp.ndarray, kernel: jnp.ndarray, w_bits: int,
+              a_bits: int, plan: Optional[SDVPlan] = None,
+              use_kernel: bool = False) -> jnp.ndarray:
+    """Fake-quant dense layer: x [..., d_in] @ kernel [d_in, d_out].
+
+    Forward: exact packed integer GEMM (``plan`` given) or the integer
+    reference decode (``plan=None``) — bit-identical.  Backward: the
+    straight-through surrogate d(fq(x) @ fq(w))."""
+    y, _, _ = _dense_int_forward(x, kernel, w_bits, a_bits, plan,
+                                 use_kernel)
+    return y.astype(x.dtype)
+
+
+def _ste_dense_fwd(x, kernel, w_bits, a_bits, plan, use_kernel):
+    y, x_fq, w_fq = _dense_int_forward(x, kernel, w_bits, a_bits, plan,
+                                       use_kernel)
+    # zero-size dtype sentinels: the cotangents must come back in the
+    # primal dtypes, and dtypes themselves are not valid fwd outputs
+    return y.astype(x.dtype), (x_fq, w_fq, jnp.zeros((0,), x.dtype),
+                               jnp.zeros((0,), kernel.dtype))
+
+
+def _ste_dense_bwd(w_bits, a_bits, plan, use_kernel, res, g):
+    x_fq, w_fq, x_tok, k_tok = res
+    gf = g.astype(jnp.float32)
+    # straight-through: quantizers are identity in the backward pass,
+    # so these are the plain matmul gradients at the fake-quant point
+    gx = jnp.einsum("...m,km->...k", gf, w_fq)
+    gw = jnp.einsum("...k,...m->km", x_fq, gf)
+    return gx.astype(x_tok.dtype), gw.astype(k_tok.dtype)
+
+
+ste_dense.defvjp(_ste_dense_fwd, _ste_dense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# STE conv2d (BSEG datapath)
+# ---------------------------------------------------------------------------
+
+def _conv_int_forward(x, w, w_bits, a_bits, plan, use_kernel):
+    """Exact integer conv forward shared by both modes.
+
+    Weights: per-output-channel symmetric over (c_in, kh, kw).
+    Activations: min/max asymmetric to the unsigned ``a_bits`` domain
+    with the mid-domain zero point (Eqs. 9/10) — the serving
+    ``bseg_conv_apply`` statistics.  ``packed_conv2d`` returns the
+    exact signed-domain correlation on every route, so packed and
+    reference decode agree bitwise."""
+    from repro.kernels import ops, ref
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=(1, 2, 3), keepdims=True)
+    sw = quantizer.symmetric_scale(amax, w_bits)
+    qw = quantizer.symmetric_qvalues(wf, sw, w_bits).astype(jnp.int32)
+
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(xf)
+    hi = jnp.max(xf)
+    xs = quantizer.asymmetric_scale(lo, hi, a_bits)
+    zp = quantizer.asymmetric_zero_point(a_bits)
+    xq_u = quantizer.asymmetric_qvalues(xf, lo, xs, a_bits)
+    xq = (xq_u - zp).astype(jnp.int32)           # signed datapath input
+
+    if plan is not None:
+        y_int = ops.packed_conv2d(xq.astype(jnp.int8), qw, plan=plan,
+                                  zero_point=zp, use_kernel=use_kernel)
+    else:
+        y_int = ref.conv2d_int_ref(xq, qw)
+    # x ~= lo + xs * (xq + zp);  sum w x ~= sw * xs * y_int
+    #                                      + (lo + xs*zp) * sw * tap_sum
+    tap_sum = jnp.sum(qw, axis=(1, 2, 3)).astype(jnp.float32)   # [C_out]
+    sw_c = sw[:, 0, 0, 0]                                       # [C_out]
+    y = sw_c * xs * y_int.astype(jnp.float32) \
+        + (lo + xs * zp) * sw_c * tap_sum
+    x_fq = lo + xs * xq_u                        # fake-quant activations
+    w_fq = qw.astype(jnp.float32) * sw
+    return y, x_fq, w_fq
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def ste_conv2d(x: jnp.ndarray, w: jnp.ndarray, w_bits: int, a_bits: int,
+               plan: Optional[BSEGPlan] = None,
+               use_kernel: bool = False) -> jnp.ndarray:
+    """Fake-quant stride-1 'same' conv2d: x [B, H, W, C_in] against
+    taps [C_out, C_in, kh, kw], forward on the BSEG packed datapath."""
+    y, _, _ = _conv_int_forward(x, w, w_bits, a_bits, plan, use_kernel)
+    return y.astype(x.dtype)
+
+
+def _conv_float(x, w):
+    """Float stride-1 'same' conv with the oracle's layout (NHWC x
+    [C_out, C_in, kh, kw]) — the STE surrogate the backward
+    differentiates."""
+    kh, kw = w.shape[2], w.shape[3]
+    groups = x.shape[-1] // w.shape[1]
+    return jax.lax.conv_general_dilated(
+        x, w.transpose(2, 3, 1, 0), (1, 1),
+        [(kh // 2, kh // 2), (kw // 2, kw // 2)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def _ste_conv2d_fwd(x, w, w_bits, a_bits, plan, use_kernel):
+    y, x_fq, w_fq = _conv_int_forward(x, w, w_bits, a_bits, plan,
+                                      use_kernel)
+    return y.astype(x.dtype), (x_fq, w_fq, jnp.zeros((0,), x.dtype),
+                               jnp.zeros((0,), w.dtype))
+
+
+def _ste_conv2d_bwd(w_bits, a_bits, plan, use_kernel, res, g):
+    x_fq, w_fq, x_tok, w_tok = res
+    _, vjp = jax.vjp(_conv_float, x_fq, w_fq)
+    gx, gw = vjp(g.astype(jnp.float32))
+    return gx.astype(x_tok.dtype), gw.astype(w_tok.dtype)
+
+
+ste_conv2d.defvjp(_ste_conv2d_fwd, _ste_conv2d_bwd)
+
+
+# ---------------------------------------------------------------------------
+# the QAT container + params walk
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QATLinear:
+    """Float master kernel trained through the STE packed forward.
+
+    ``kernel`` [..., d_in, d_out] is the only data field — gradients
+    and optimizer state stay float; quantization/packing happens fresh
+    inside each forward (the QAT point).  ``plan=None`` runs the
+    integer-decode reference forward (bit-identical); a plan routes
+    the GEMM through ``packed_matmul`` on that plan's datapath.  A
+    scanned layer stack keeps its [L, d_in, d_out] leading axis —
+    ``lax.scan`` slices it off, yielding the per-layer container
+    (same pattern as ``SDVLinear``)."""
+    kernel: jnp.ndarray
+    w_bits: int
+    a_bits: int
+    plan: Optional[SDVPlan] = None
+    use_kernel: bool = False
+
+    def qat_apply(self, x: jnp.ndarray) -> jnp.ndarray:
+        return ste_dense(x, self.kernel, self.w_bits, self.a_bits,
+                         self.plan, self.use_kernel)
+
+
+jax.tree_util.register_dataclass(
+    QATLinear, data_fields=["kernel"],
+    meta_fields=["w_bits", "a_bits", "plan", "use_kernel"])
+
+
+def is_qat(x) -> bool:
+    return isinstance(x, QATLinear)
+
+
+def qat_params(params: Any, w_bits: int = 4, a_bits: int = 8,
+               min_size: int = 1 << 16,
+               precision: Optional[Dict[str, Tuple[int, int]]] = None,
+               plan_policy: str = "default",
+               plan_cache: Optional[str] = None,
+               rows: Optional[int] = None,
+               use_kernel: Optional[bool] = None) -> Any:
+    """Wrap every packable kernel leaf in a ``QATLinear``.
+
+    Mirrors ``models/quantized.serve_params``'s walk exactly — same
+    leaf names, same stacked-container and skip rules, same lm_head
+    top-level case — so QAT fake-quantizes precisely the layers the
+    export will pack.  ``precision`` overrides (w_bits, a_bits) per
+    leaf path (the ``bitsearch`` output); ``plan_policy`` mirrors
+    serving: ``"default"`` trains on the integer-decode reference
+    forward (plan=None — bit-identical arithmetic, no packing cost
+    per step), ``"auto"``/``"cache"`` resolve a packed plan per layer
+    through the planner so the forward runs the packed dispatch.
+
+    Non-destructive: the wrapped tree shares the float kernels with
+    ``params`` — unwrap with ``float_params`` for checkpoint/export.
+    """
+    from repro.models.quantized import (_QUANT_LEAF_NAMES,
+                                        _SKIP_CONTAINERS,
+                                        _stacked_leading_axis,
+                                        PLANNER_DECODE_ROWS)
+    if plan_policy not in ("default", "auto", "cache"):
+        raise ValueError(f"unknown plan policy {plan_policy!r}")
+    if rows is None:
+        rows = PLANNER_DECODE_ROWS
+    use_kernel = _use_kernel_default(use_kernel)
+    precision = precision or {}
+
+    planner_ctx = None
+    if plan_policy != "default":
+        from repro import planner as _planner
+        cache = _planner.PlanCache.load(plan_cache) \
+            if plan_policy == "cache" else None
+        planner_ctx = {"mod": _planner, "cache": cache, "memo": {}}
+
+    def layer_plan(name, v, wb, ab):
+        if planner_ctx is None:
+            return None
+        mod = planner_ctx["mod"]
+        layer = mod.matmul_spec(name, rows, v.shape[-2], v.shape[-1],
+                                w_bits=wb, a_bits=ab)
+        key = layer.key()
+        if key not in planner_ctx["memo"]:
+            choice = None
+            if planner_ctx["cache"] is not None:
+                choice = planner_ctx["cache"].get_choice(layer)
+            if choice is None:
+                choice = mod.choose_plan(layer)
+                if planner_ctx["cache"] is not None:
+                    planner_ctx["cache"].put_choice(choice, source="qat")
+            planner_ctx["memo"][key] = choice
+        return planner_ctx["memo"][key].plan
+
+    def wrap(v, path):
+        wb, ab = precision.get(path, (w_bits, a_bits))
+        return QATLinear(kernel=v, w_bits=wb, a_bits=ab,
+                         plan=layer_plan(path, v, wb, ab),
+                         use_kernel=use_kernel)
+
+    def walk(tree, name):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for k, v in tree.items():
+            path = f"{name}/{k}" if name else k
+            if k in _SKIP_CONTAINERS:
+                out[k] = v
+            elif isinstance(v, dict):
+                out[k] = walk(v, path)
+            elif k in _QUANT_LEAF_NAMES and hasattr(v, "ndim") \
+                    and (v.ndim == 2
+                         or (v.ndim == 3 and _stacked_leading_axis(path))) \
+                    and v.size >= min_size:
+                out[k] = wrap(v, path)
+            else:
+                out[k] = v
+        return out
+
+    out = walk(params, "")
+    if isinstance(out, dict) and "lm_head" in out \
+            and not is_qat(out["lm_head"]) \
+            and getattr(out["lm_head"], "ndim", 0) == 2:
+        out["lm_head"] = wrap(out["lm_head"], "lm_head")
+    if planner_ctx is not None and planner_ctx["cache"] is not None:
+        planner_ctx["cache"].save()
+    return out
+
+
+def float_params(params: Any) -> Any:
+    """Unwrap ``QATLinear`` containers back to the float kernel tree
+    (the checkpoint/export representation)."""
+    def unwrap(t):
+        if is_qat(t):
+            return t.kernel
+        if isinstance(t, dict):
+            return {k: unwrap(v) for k, v in t.items()}
+        return t
+    return unwrap(params)
+
+
+def count_qat_layers(params: Any) -> int:
+    def walk(t):
+        if is_qat(t):
+            return 1
+        if isinstance(t, dict):
+            return sum(walk(v) for v in t.values())
+        return 0
+    return walk(params)

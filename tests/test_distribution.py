@@ -35,6 +35,20 @@ for _ in range(30):
 out["int8_ar_rel_err"] = float(np.abs(acc - acc_true).max()
                                / np.abs(acc_true).max())
 
+# --- SDV-packed word reduce == unpacked int8 reduce, bitwise, on a
+# --- real 4-rank data axis (the default above already packed; rerun
+# --- both modes explicitly from the same state) -----------------------
+errs0 = {"w": jnp.zeros_like(grads["w"])}
+gh_p, e_p = compressed_allreduce(grads, errs0, mesh, axis="data",
+                                 pack_words=True)
+gh_u, e_u = compressed_allreduce(grads, errs0, mesh, axis="data",
+                                 pack_words=False)
+out["packed_ar_bit_exact"] = bool(
+    np.array_equal(np.asarray(gh_p["w"]).view(np.uint32),
+                   np.asarray(gh_u["w"]).view(np.uint32))
+    and np.array_equal(np.asarray(e_p["w"]).view(np.uint32),
+                       np.asarray(e_u["w"]).view(np.uint32)))
+
 # --- tiny model trains under pjit on the mesh (DP x TP) ---
 from repro.configs.registry import ARCHS
 from repro.models import init_params, values, specs, Rules
@@ -100,6 +114,10 @@ def test_mesh_devices(mesh_result):
 
 def test_int8_allreduce_error_feedback(mesh_result):
     assert mesh_result["int8_ar_rel_err"] < 0.02
+
+
+def test_packed_allreduce_bit_exact_on_mesh(mesh_result):
+    assert mesh_result["packed_ar_bit_exact"]
 
 
 def test_pjit_training_runs_and_learns(mesh_result):
