@@ -1,6 +1,6 @@
 .PHONY: test dev-deps planner-smoke planner-test test-datapaths \
         test-wide-words serve-smoke test-serving chaos-smoke test-chaos \
-        qat-smoke test-qat
+        continuous-smoke test-continuous qat-smoke test-qat
 
 # tier-1 verify (ROADMAP.md): the whole suite, fail-fast, quiet
 test:
@@ -45,6 +45,20 @@ chaos-smoke:
 
 test-chaos:
 	PYTHONPATH=src python -m pytest -q tests/test_chaos.py
+
+# continuous batching: mid-wave joins vs strict wave boundaries on the
+# same seeded trace (scratch run, not the tracked BENCH_9), plus the
+# per-slot decode-position tests across the serving + chaos suites
+continuous-smoke:
+	PYTHONPATH=src python -m repro.serving.loadgen --continuous \
+	    --arch tinyllama-1.1b --smoke --rates 150 --duration 0.3 \
+	    --prompt-len 6 --new-tokens 8 --batch 4 --buckets 16,24 \
+	    --prefill-chunk 4
+
+test-continuous:
+	PYTHONPATH=src python -m pytest -q tests/test_serving.py \
+	    tests/test_chaos.py -k "midwave or continuous or percentile \
+	    or est_wave or emas or per_slot"
 
 # packed QAT: a short --qat launcher run (STE packed forward, bitwidth
 # search warming a plan cache, serving-ready export), and its test file

@@ -177,6 +177,37 @@ assert any("n=3" in p and d == "dsp48e2" for p, d in plans), plans
 print(f"BENCH_6.json ok: {len(kern)} wide kernel rows, serving W4A8 "
       f"buckets on {sorted(plans)}")
 PY
+# the tracked BENCH_9 payload: continuous batching with mid-wave joins
+# vs strict wave boundaries under the SAME seeded Poisson trace, at >=2
+# arrival rates above the BENCH_5/BENCH_7 sweeps — joins must win BOTH
+# p99 and wave occupancy at every rate, with the per-request bit-exact
+# audit (vs running each request alone) reporting zero mismatches
+python - BENCH_9.json <<'PY'
+import json, sys
+payload = json.load(open(sys.argv[1]))
+assert payload["bench"] == "continuous_batching" and payload["pr"] == 9
+assert payload["bit_exact_verified"] is True, "audit was skipped"
+rates = sorted({p["rate_per_s"] for p in payload["points"]})
+assert len([r for r in rates if r > 120]) >= 2, rates   # above BENCH_5
+for rate in rates:
+    pts = {p["midwave_joins"]: p for p in payload["points"]
+           if p["rate_per_s"] == rate}
+    assert set(pts) == {False, True}, (rate, set(pts))
+    solo, joins = pts[False], pts[True]
+    assert joins["joins"] > 0, (rate, "no mid-wave joins happened")
+    assert joins["occupancy"] > solo["occupancy"], (rate, joins, solo)
+    assert joins["p99_ms"] < solo["p99_ms"], (rate, joins, solo)
+    for p in (solo, joins):
+        assert p["bit_exact_checked"] > 0, (rate, p)
+        assert p["bit_exact_mismatches"] == 0, (rate, p)
+    assert joins["bit_exact_midwave_checked"] > 0, (rate, joins)
+print("BENCH_9.json ok: " + "; ".join(
+    f"{r:g}/s p99 {pts[True]['p99_ms']:.1f}<{pts[False]['p99_ms']:.1f} ms, "
+    f"occ {pts[True]['occupancy']:.3f}>{pts[False]['occupancy']:.3f}"
+    for r in rates
+    for pts in [{p["midwave_joins"]: p for p in payload["points"]
+                 if p["rate_per_s"] == r}]))
+PY
 # qat smoke: a 2-step packed-STE run from float init on the tiny arch —
 # every wrapped layer must carry a planner-resolved plan, the export
 # must round-trip through serve_params onto SDV containers, and the

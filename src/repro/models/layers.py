@@ -325,11 +325,17 @@ def _quantize_kv(t):
 
 
 def decode_attention(params, cfg: AttnConfig, x, *, cache_k, cache_v,
-                     cache_index, cache_k_scale=None, cache_v_scale=None):
+                     cache_index, cache_k_scale=None, cache_v_scale=None,
+                     write_mask=None):
     """Single-token decode against a KV cache.
 
-    x [B, 1, d]; cache_k/v [B, S_max, KV, hd]; cache_index [] int32 —
-    the number of valid entries (the new token goes to that slot).
+    x [B, 1, d]; cache_k/v [B, S_max, KV, hd]; cache_index int32 —
+    scalar or per-slot [B]: each slot's count of valid entries (the
+    new token goes to that slot's position).  Per-slot positions are
+    what let a fresh session join a freed batch slot mid-wave.
+    ``write_mask`` [B] bool (optional): rows with False skip the KV
+    write — slots that are mid-prefill in a mixed iteration, whose
+    index must not move here; their outputs are never read.
     With ``cache_*_scale`` the cache is int8 per-(position, head)
     quantized — the paper's packing idea applied to the decode memory
     roofline (cache traffic halves vs bf16).
@@ -340,7 +346,11 @@ def decode_attention(params, cfg: AttnConfig, x, *, cache_k, cache_v,
     r = h // g
     s_max = cache_k.shape[1]
     quant = cache_k_scale is not None
-    pos = jnp.full((b, 1), cache_index, jnp.int32)
+    idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (b,))
+    rows = jnp.arange(b)
+    # masked rows scatter out of bounds -> dropped
+    dest = idx if write_mask is None else jnp.where(write_mask, idx, s_max)
+    pos = idx[:, None]
     q = dense_apply(params["wq"], x).reshape(b, 1, h, hd)
     k = dense_apply(params["wk"], x).reshape(b, 1, g, hd)
     v = dense_apply(params["wv"], x).reshape(b, 1, g, hd)
@@ -350,36 +360,94 @@ def decode_attention(params, cfg: AttnConfig, x, *, cache_k, cache_v,
     if quant:
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
-        kc = jax.lax.dynamic_update_slice_in_dim(cache_k, kq, cache_index,
-                                                 axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache_v, vq, cache_index,
-                                                 axis=1)
-        ksc = jax.lax.dynamic_update_slice_in_dim(cache_k_scale, ks,
-                                                  cache_index, axis=1)
-        vsc = jax.lax.dynamic_update_slice_in_dim(cache_v_scale, vs,
-                                                  cache_index, axis=1)
+        kc = cache_k.at[rows, dest].set(kq[:, 0], mode="drop")
+        vc = cache_v.at[rows, dest].set(vq[:, 0], mode="drop")
+        ksc = cache_k_scale.at[rows, dest].set(ks[:, 0], mode="drop")
+        vsc = cache_v_scale.at[rows, dest].set(vs[:, 0], mode="drop")
         kc_f = kc.astype(jnp.float32) * ksc[..., None]
         vc_f = vc.astype(jnp.float32) * vsc[..., None]
     else:
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            cache_k, k.astype(cache_k.dtype), cache_index, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            cache_v, v.astype(cache_v.dtype), cache_index, axis=1)
+        kc = cache_k.at[rows, dest].set(k[:, 0].astype(cache_k.dtype),
+                                        mode="drop")
+        vc = cache_v.at[rows, dest].set(v[:, 0].astype(cache_v.dtype),
+                                        mode="drop")
         kc_f = kc.astype(jnp.float32)
         vc_f = vc.astype(jnp.float32)
     kpos = jnp.arange(s_max)
-    valid = kpos <= cache_index
+    valid = kpos[None, :] <= idx[:, None]
     if cfg.window is not None:
-        valid = valid & (kpos > cache_index - cfg.window)
+        valid = valid & (kpos[None, :] > idx[:, None] - cfg.window)
     s = jnp.einsum("bgrd,bkgd->bgrk",
                    q.reshape(b, g, r, hd).astype(jnp.float32),
                    kc_f) / math.sqrt(hd)
     if cfg.softcap is not None:
         s = jnp.tanh(s / cfg.softcap) * cfg.softcap
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgrk,bkgd->bgrd", p, vc_f)
     out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    y = dense_apply(params["wo"], out)
+    if quant:
+        return y, kc, vc, ksc, vsc
+    return y, kc, vc
+
+
+def prefill_attention(params, cfg: AttnConfig, x, *, cache_k, cache_v,
+                      cache_index, n_valid, cache_k_scale=None,
+                      cache_v_scale=None):
+    """Teacher-forced chunked prefill against a decode KV cache.
+
+    x [B, C, d]; cache_index [B] int32 (each slot's filled length);
+    n_valid [B] int32 in [0, C] — how many of this slot's C columns
+    carry real prompt tokens.  Rows with n_valid == 0 (slots that are
+    decoding or empty) are left untouched: their writes land out of
+    bounds and are dropped, and their outputs are never read.
+    Returns (new_k, new_v[, new_k_scale, new_v_scale]) — prefill
+    outputs are never sampled, so no logits are produced here.
+    """
+    b, c, _ = x.shape
+    h, g, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    r = h // g
+    s_max = cache_k.shape[1]
+    quant = cache_k_scale is not None
+    idx = jnp.asarray(cache_index, jnp.int32)
+    rows = jnp.arange(b)[:, None]
+    pos = idx[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]   # [B, C]
+    # columns beyond n_valid scatter out of bounds -> dropped
+    dest = jnp.where(jnp.arange(c)[None, :] < n_valid[:, None], pos, s_max)
+    q = dense_apply(params["wq"], x).reshape(b, c, h, hd)
+    k = dense_apply(params["wk"], x).reshape(b, c, g, hd)
+    v = dense_apply(params["wv"], x).reshape(b, c, g, hd)
+    if cfg.use_rope:
+        q = rope(q, pos, theta=cfg.rope_theta)
+        k = rope(k, pos, theta=cfg.rope_theta)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        kc = cache_k.at[rows, dest].set(kq, mode="drop")
+        vc = cache_v.at[rows, dest].set(vq, mode="drop")
+        ksc = cache_k_scale.at[rows, dest].set(ks, mode="drop")
+        vsc = cache_v_scale.at[rows, dest].set(vs, mode="drop")
+        kc_f = kc.astype(jnp.float32) * ksc[..., None]
+        vc_f = vc.astype(jnp.float32) * vsc[..., None]
+    else:
+        kc = cache_k.at[rows, dest].set(k.astype(cache_k.dtype), mode="drop")
+        vc = cache_v.at[rows, dest].set(v.astype(cache_v.dtype), mode="drop")
+        kc_f = kc.astype(jnp.float32)
+        vc_f = vc.astype(jnp.float32)
+    kpos = jnp.arange(s_max)
+    valid = kpos[None, None, :] <= pos[:, :, None]                 # [B, C, S]
+    if cfg.window is not None:
+        valid = valid & (kpos[None, None, :] > pos[:, :, None] - cfg.window)
+    s = jnp.einsum("bcgrd,bsgd->bgrcs",
+                   q.reshape(b, c, g, r, hd).astype(jnp.float32),
+                   kc_f) / math.sqrt(hd)
+    if cfg.softcap is not None:
+        s = jnp.tanh(s / cfg.softcap) * cfg.softcap
+    s = jnp.where(valid[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrcs,bsgd->bcgrd", p, vc_f)
+    out = out.reshape(b, c, h * hd).astype(x.dtype)
     y = dense_apply(params["wo"], out)
     if quant:
         return y, kc, vc, ksc, vsc

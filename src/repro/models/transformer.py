@@ -471,7 +471,11 @@ def init_cache(cfg: ArchConfig, rules: Rules, batch_size: int, s_max: int,
                 dtype=jnp.float32)
         return out
 
-    cache: Dict[str, Any] = {"index": ini.zeros((), (), dtype=jnp.int32)}
+    # per-slot decode positions: slot i has index[i] valid cache entries,
+    # so a freed slot can be reset to 0 and rejoined mid-wave while its
+    # neighbours keep decoding (token-level continuous batching).
+    cache: Dict[str, Any] = {"index": ini.zeros((b,), (None,),
+                                                dtype=jnp.int32)}
     if cfg.family in ("dense", "moe", "vlm"):
         cache.update(kvc(cfg.n_layers, s_max))
     elif cfg.family == "encdec":
@@ -513,49 +517,70 @@ def init_cache(cfg: ArchConfig, rules: Rules, batch_size: int, s_max: int,
 
 def _decode_attn_ring(bp, cfg: ArchConfig, x, k_cache, v_cache, index,
                       *, window: int):
-    """Sliding-window decode with a ring buffer of size ``window``."""
+    """Sliding-window decode with a ring buffer of size ``window``.
+
+    ``index`` is the per-slot position vector [B]: each batch slot has
+    its own ring write head and entry ages."""
     acfg = _attn_cfg(cfg, window=window)
     b = x.shape[0]
     h, g, hd = cfg.n_heads, cfg.n_kv, cfg.hd
-    slot = jnp.mod(index, window)
-    pos = jnp.full((b, 1), index, jnp.int32)
+    index = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (b,))
+    slot = jnp.mod(index, window)                                  # [B]
+    pos = index[:, None]
     q = L.dense_apply(bp["wq"], x).reshape(b, 1, h, hd)
     k = L.dense_apply(bp["wk"], x).reshape(b, 1, g, hd)
     v = L.dense_apply(bp["wv"], x).reshape(b, 1, g, hd)
     q = L.rope(q, pos, theta=cfg.rope_theta)
     k = L.rope(k, pos, theta=cfg.rope_theta)
-    kc = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype),
-                                             slot, axis=1)
-    vc = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype),
-                                             slot, axis=1)
+    rows = jnp.arange(b)
+    kc = k_cache.at[rows, slot].set(k[:, 0].astype(k_cache.dtype))
+    vc = v_cache.at[rows, slot].set(v[:, 0].astype(v_cache.dtype))
     # entry ages: slot s holds position index - ((slot - s) mod window)
-    offs = jnp.mod(slot - jnp.arange(window), window)
-    entry_pos = index - offs
-    valid = (entry_pos >= 0) & (entry_pos >= index - window + 1)
+    offs = jnp.mod(slot[:, None] - jnp.arange(window)[None, :], window)
+    entry_pos = index[:, None] - offs                              # [B, W]
+    valid = (entry_pos >= 0) & (entry_pos >= index[:, None] - window + 1)
     r = h // g
     s = jnp.einsum("bgrd,bkgd->bgrk",
                    q.reshape(b, g, r, hd).astype(jnp.float32),
                    kc.astype(jnp.float32)) / math.sqrt(hd)
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgrk,bkgd->bgrd", p, vc.astype(jnp.float32))
     out = out.reshape(b, 1, h * hd).astype(x.dtype)
     return L.dense_apply(bp["wo"], out), kc, vc
 
 
-def decode_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray):
+def decode_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray,
+                advance=None):
     """One decode step.  tokens [B, 1] int32; returns (logits, new cache).
 
     The cache pytree layout matches ``init_cache`` (stacked layer axis);
     the layer loop is a ``lax.scan`` carrying x and scanning cache
-    slices alongside parameters.
+    slices alongside parameters.  ``cache["index"]`` is the per-slot
+    position vector [B] (scalars from legacy snapshots broadcast); the
+    new cache always carries the normalized [B] form so the pytree
+    signature stays stable under jit.
+
+    ``advance`` [B] int32 (optional, KV-cache families only): slots
+    with 0 neither write KV nor move their index — they are mid-prefill
+    in a mixed continuous-batching iteration and their logits are
+    discarded.  Omitted means every slot advances (the classic step).
     """
-    index = cache["index"]
+    b = tokens.shape[0]
+    index = jnp.broadcast_to(jnp.asarray(cache["index"], jnp.int32), (b,))
+    if advance is not None and cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"advance mask unsupported for family {cfg.family!r}")
     x = _embed(cfg, params, tokens)
 
     if cfg.family in ("dense", "moe", "vlm"):
         acfg = _attn_cfg(cfg)
         me = cfg.moe_every if cfg.family == "moe" else 1
+        if advance is None:
+            bump, wmask = 1, None
+        else:
+            bump = jnp.broadcast_to(jnp.asarray(advance, jnp.int32), (b,))
+            wmask = bump > 0
 
         kv8 = "k_scale" in cache
 
@@ -563,7 +588,7 @@ def decode_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray):
             outs = L.decode_attention(
                 bp["attn"], acfg, L.rmsnorm_apply(bp["ln_attn"], xc),
                 cache_k=kc, cache_v=vc, cache_index=index,
-                cache_k_scale=ks, cache_v_scale=vs)
+                cache_k_scale=ks, cache_v_scale=vs, write_mask=wmask)
             h, rest = outs[0], outs[1:]
             y = xc + h
             z = L.rmsnorm_apply(bp["ln_mlp"], y)
@@ -595,7 +620,7 @@ def decode_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray):
             x, (nk, nv) = _layer_loop(cfg, body, x, xs, n_groups)
             nk = nk.reshape(cache["k"].shape)
             nv = nv.reshape(cache["v"].shape)
-            new_cache = dict(cache, k=nk, v=nv, index=index + 1)
+            new_cache = dict(cache, k=nk, v=nv, index=index + bump)
         elif kv8:
             def body(xc, sl):
                 bp, kc, vc, ks, vs = sl
@@ -609,7 +634,7 @@ def decode_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray):
                                cache["k_scale"], cache["v_scale"]),
                 cfg.n_layers)
             new_cache = dict(cache, k=nk, v=nv, k_scale=nks, v_scale=nvs,
-                             index=index + 1)
+                             index=index + bump)
         else:
             def body(xc, sl):
                 bp, kc, vc = sl
@@ -619,7 +644,7 @@ def decode_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray):
             x, (nk, nv) = _layer_loop(
                 cfg, body, x, (params["blocks"], cache["k"], cache["v"]),
                 cfg.n_layers)
-            new_cache = dict(cache, k=nk, v=nv, index=index + 1)
+            new_cache = dict(cache, k=nk, v=nv, index=index + bump)
 
     elif cfg.family == "encdec":
         acfg = _attn_cfg(cfg)
@@ -709,3 +734,134 @@ def decode_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray):
         raise ValueError(cfg.family)
 
     return _unembed(cfg, params, x), new_cache
+
+
+def reset_slot(cache, slot):
+    """Zero batch slot ``slot`` across every cache leaf.
+
+    Leaves are laid out (layers, B, ...); ``index`` is the per-slot
+    position vector [B].  Clearing the position plus all per-slot
+    state (KV rows, quant scales, ring buffers, conv/SSM/RNN state)
+    is what makes a freed slot safe to hand to a new session mid-wave:
+    only positions <= index[slot] are ever attended, and each position
+    is rewritten before it becomes attendable, so no stale state from
+    the previous occupant can leak into the new one.
+    """
+    out = {}
+    for name, leaf in cache.items():
+        if name == "index":
+            out[name] = leaf.at[slot].set(0)
+        else:
+            out[name] = leaf.at[:, slot].set(jnp.zeros((), leaf.dtype))
+    return out
+
+
+def prefill_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray,
+                 n_valid: jnp.ndarray):
+    """One chunked-prefill step for the KV-cache families.
+
+    tokens [B, C] int32 — a teacher-forced prompt chunk per slot,
+    zero-padded; n_valid [B] int32 in [0, C] says how many columns of
+    each row are real.  Slots with n_valid == 0 (decoding or empty)
+    are untouched: their writes drop out of bounds and their index
+    does not advance.  A long prompt therefore stalls a wave of
+    decoders for ceil(P/C) iterations instead of P.  Returns the new
+    cache only — prefill logits are never sampled.
+
+    Families with recurrent state (ssm/hybrid) and encdec replay
+    prompts one token per ``decode_step`` instead (chunk = 1): their
+    per-token state update is inherently sequential.
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"prefill_step: unsupported family {cfg.family}")
+    b = tokens.shape[0]
+    index = jnp.broadcast_to(jnp.asarray(cache["index"], jnp.int32), (b,))
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    x = _embed(cfg, params, tokens)
+    acfg = _attn_cfg(cfg)          # same attention config as decode_step
+    me = cfg.moe_every if cfg.family == "moe" else 1
+    kv8 = "k_scale" in cache
+
+    def one(bp, xc, kc, vc, moe: bool, ks=None, vs=None):
+        outs = L.prefill_attention(
+            bp["attn"], acfg, L.rmsnorm_apply(bp["ln_attn"], xc),
+            cache_k=kc, cache_v=vc, cache_index=index, n_valid=n_valid,
+            cache_k_scale=ks, cache_v_scale=vs)
+        h, rest = outs[0], outs[1:]
+        y = xc + h
+        z = L.rmsnorm_apply(bp["ln_mlp"], y)
+        if moe:
+            y = y + L.moe_apply(bp["moe"], _moe_cfg(cfg), z)
+        else:
+            y = y + L.mlp_apply(bp["mlp"], z, act=cfg.act)
+        return (y,) + rest
+
+    if me > 1:
+        n_groups = cfg.n_layers // me
+        kg = cache["k"].reshape((n_groups, me) + cache["k"].shape[1:])
+        vg = cache["v"].reshape((n_groups, me) + cache["v"].shape[1:])
+
+        def body(xc, sl):
+            bps, kc, vc = sl[:-2], sl[-2], sl[-1]
+            nks, nvs = [], []
+            y = xc
+            for i in range(me):
+                y, nk, nv = one(bps[i], y, kc[i], vc[i], moe=(i == 0))[:3]
+                nks.append(nk)
+                nvs.append(nv)
+            return y, (jnp.stack(nks), jnp.stack(nvs))
+
+        xs = tuple([params["blocks"]]
+                   + [params[f"blocks_dense{i}"] for i in range(1, me)]
+                   + [kg, vg])
+        _, (nk, nv) = _layer_loop(cfg, body, x, xs, n_groups)
+        nk = nk.reshape(cache["k"].shape)
+        nv = nv.reshape(cache["v"].shape)
+        return dict(cache, k=nk, v=nv, index=index + n_valid)
+    if kv8:
+        def body(xc, sl):
+            bp, kc, vc, ks, vs = sl
+            y, nk, nv, nks, nvs = one(bp, xc, kc, vc,
+                                      moe=(cfg.family == "moe"),
+                                      ks=ks, vs=vs)
+            return y, (nk, nv, nks, nvs)
+
+        _, (nk, nv, nks, nvs) = _layer_loop(
+            cfg, body, x, (params["blocks"], cache["k"], cache["v"],
+                           cache["k_scale"], cache["v_scale"]),
+            cfg.n_layers)
+        return dict(cache, k=nk, v=nv, k_scale=nks, v_scale=nvs,
+                    index=index + n_valid)
+
+    def body(xc, sl):
+        bp, kc, vc = sl
+        y, nk, nv = one(bp, xc, kc, vc, moe=(cfg.family == "moe"))
+        return y, (nk, nv)
+
+    _, (nk, nv) = _layer_loop(
+        cfg, body, x, (params["blocks"], cache["k"], cache["v"]),
+        cfg.n_layers)
+    return dict(cache, k=nk, v=nv, index=index + n_valid)
+
+
+def prefill_slot(cfg: ArchConfig, params, cache, slot,
+                 tokens: jnp.ndarray, n_valid: jnp.ndarray):
+    """Chunked prefill of a SINGLE batch slot.
+
+    ``slot`` is a traced int32 scalar (one compiled program serves
+    every slot); tokens [1, C] int32; n_valid [1] int32.  The slot's
+    row of every cache leaf is sliced out, prefilled as a batch of
+    one via ``prefill_step``, and scattered back.  Prefill is
+    per-slot by construction, so a request's prompt replay runs the
+    exact same compiled program — on the same single-row operands —
+    whether it opens a wave or joins one mid-flight: bit-exactness
+    across wave compositions is structural.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    sub = {name: jax.lax.dynamic_slice_in_dim(
+        leaf, slot, 1, axis=0 if name == "index" else 1)
+        for name, leaf in cache.items()}
+    new = prefill_step(cfg, params, sub, tokens, n_valid)
+    return {name: jax.lax.dynamic_update_slice_in_dim(
+        cache[name], new[name], slot, axis=0 if name == "index" else 1)
+        for name in cache}

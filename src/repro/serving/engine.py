@@ -13,12 +13,29 @@ packed kernels execute at high occupancy":
     decode step once per bucket shape (``warmup``), and keeps the
     bucket's KV cache + decode session table alive across waves;
   * a ``SessionTable`` maps requests to KV-cache slots: joining
-    requests take the lowest free slot at a wave boundary, finished
-    requests free their slot mid-wave (the wave ends early once every
-    session left).  Mid-wave *joins* are structurally impossible with
-    the repo's shared-position cache (one scalar ``index`` per cache
-    pytree), so admission happens at wave boundaries only; per-slot
-    position tracking is the next scaling PR (DESIGN.md §5).
+    requests take the lowest free slot, finished requests free their
+    slot mid-wave, and — because the cache carries a *per-slot*
+    position vector ``index[B]`` (``models.init_cache``) — a freed
+    slot is reset (``models.reset_slot``) and handed to the next
+    queued request **mid-wave**: token-level continuous batching
+    (vLLM/Orca iteration-level scheduling, DESIGN.md §5).  Waves are
+    resumable: ``step()`` advances the active wave by a bounded
+    quantum of iterations and pulls fitting queued requests into
+    freed slots every iteration, so arrivals between steps join the
+    running wave instead of waiting for the next boundary;
+  * prompt replay is split from decode: KV-cache families
+    (dense/moe/vlm) replay prompts through a chunked *prefill step*
+    (``models.prefill_slot``, ``prefill_chunk`` teacher-forced tokens
+    per slot per iteration), and prefill piggybacks on decode — both
+    run in the same iteration on disjoint slots, the decode advance
+    mask freezing mid-prefill slots — so a joiner replays its prompt
+    in ceil(P/C) iterations without ever stalling its decoding
+    neighbours;
+    recurrent-state families (ssm/hybrid) and encdec replay
+    token-at-a-time through ``decode_step``.  Prefill and decode step
+    times feed *separate* EMAs — admission control estimates from the
+    decode EMA of the request's own bucket, never a prefill-skewed
+    global max.
 
 Failure is a *bucket-local* event, never process death (the kernel
 dispatch's kernel-route → ref-route layering, lifted to the engine):
@@ -74,7 +91,7 @@ import numpy as np
 from .faults import FaultPlan, InjectedFault, WaveFaults
 from .queue import (Backpressure, BucketShape, BucketUnavailable,
                     ContinuousBatcher, DeadlineInfeasible, Request,
-                    default_buckets)
+                    bucket_for, default_buckets)
 from .metrics import EngineMetrics, packed_utilization
 
 PLAN_POLICIES = ("default", "auto", "cache")
@@ -103,10 +120,19 @@ def default_plan_policy(plan_cache: Optional[str] = None) -> str:
 
 @dataclasses.dataclass
 class Session:
-    """One request occupying a KV-cache slot."""
+    """One request occupying a KV-cache slot.
+
+    ``fed`` counts prompt tokens consumed so far — the slot is
+    *prefilling* while ``fed < prompt_len - 1`` (those teacher-forced
+    positions never need logits) and *decoding* after.  Because the
+    cache position is per-slot, ``fed`` always equals this slot's
+    ``cache["index"][slot]``, regardless of what its neighbours do.
+    """
     request: Request
     start_t: float
     slot: int = -1
+    fed: int = 0
+    midwave: bool = False           # joined a running wave (not at start)
     tokens: List[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -166,6 +192,7 @@ class Completion:
     start_t: float
     finish_t: float
     deadline: Optional[float] = None
+    midwave_join: bool = False      # session joined its wave mid-flight
 
     @property
     def latency_s(self) -> float:
@@ -177,21 +204,47 @@ class Completion:
 
 
 @dataclasses.dataclass
+class _WaveState:
+    """Bookkeeping for one resumable wave (lives across ``step()``
+    calls until the session table empties or the wave fails)."""
+    faults: WaveFaults
+    allow_joins: bool
+    iters: int = 0                  # total iterations (fault schedule)
+    inject: bool = False            # draws fault schedules as it runs
+    sched_window: int = 1           # iterations per fault-schedule draw
+    sched_base: int = 0             # iters at the current draw
+    skew_s: float = 0.0             # slow-wave skew accumulated so far
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    prefill_wall_s: float = 0.0
+    decode_wall_s: float = 0.0
+    busy_slot_steps: int = 0        # occupied slots summed over iters
+    requests: int = 0               # admitted incl. mid-wave joiners
+
+
+@dataclasses.dataclass
 class _BucketState:
     bucket: BucketShape
     qparams: Any
     cache0: Any                     # pristine cache pytree, reused
     sessions: SessionTable
     warmed: bool = False
-    step_s: float = 0.0             # EMA of one decode step's wall clock
+    decode_s: float = 0.0           # EMA of one decode step's wall clock
+    prefill_s: float = 0.0          # EMA of one prefill step's wall clock
     health: str = "healthy"         # circuit breaker state
     fail_streak: int = 0            # consecutive wave/warmup failures
     quarantined_until: float = 0.0  # cooldown expiry (engine clock)
+    cache: Any = None               # live cache of the active wave
+    wave: Optional[_WaveState] = None
 
 
 class Engine:
-    """The execution core.  Synchronous: ``step()`` pulls one ready
-    batch from the batcher and runs it to completion as a *wave*."""
+    """The execution core.  ``step()`` advances the *active* wave by
+    ``wave_quantum`` iterations — pulling queued requests into freed
+    KV slots every iteration (mid-wave joins) — or, when no wave is
+    active, pulls a ready batch from the batcher and starts one.
+    ``midwave_joins=False`` restores boundary-only admission (the
+    BENCH_9 A/B baseline)."""
 
     def __init__(self, cfg, params, *, compute: str = "sdv",
                  weight_bits: int = 4, act_bits: int = 8,
@@ -205,10 +258,13 @@ class Engine:
                  breaker_threshold: int = 3,
                  breaker_cooldown_s: float = 2.0,
                  faults: Optional[FaultPlan] = None,
+                 midwave_joins: bool = True,
+                 prefill_chunk: int = 8,
+                 wave_quantum: int = 1,
                  min_size: int = 1024, pad_token: int = 0):
         import jax
 
-        from repro.models import decode_step
+        from repro.models import decode_step, prefill_slot, reset_slot
 
         self.cfg = cfg
         self.params = params
@@ -238,7 +294,33 @@ class Engine:
         self._admitting = True
         self._states: Dict[str, _BucketState] = {}
         self._qparams_by_rows: Dict[int, Any] = {}
-        self._dec = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+        self.midwave_joins = midwave_joins
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got "
+                             f"{prefill_chunk}")
+        #: teacher-forced tokens per prefill iteration; recurrent-state
+        #: families replay token-at-a-time through decode_step instead
+        self.prefill_chunk = prefill_chunk \
+            if cfg.family in ("dense", "moe", "vlm") else 1
+        if wave_quantum < 1:
+            raise ValueError(f"wave_quantum must be >= 1, got "
+                             f"{wave_quantum}")
+        self.wave_quantum = wave_quantum
+        self._active: Optional[str] = None      # key of the active wave
+        # one decode fn for every decode everywhere (pure-decode,
+        # mixed prefill+decode, warmup, fallback): the advance mask is
+        # an *input*, so compositions share a single compiled function
+        # and per-request results cannot depend on wave makeup
+        use_adv = cfg.family in ("dense", "moe", "vlm")
+        self._dec = jax.jit(
+            lambda p, c, t, adv: decode_step(
+                cfg, p, c, t, advance=adv if use_adv else None))
+        # prefill is per-slot: one [1, C] program reused for every
+        # slot, wave start and mid-wave join alike, so a prompt's
+        # replay cost and numerics never depend on wave composition
+        self._pre = jax.jit(
+            lambda p, c, s, t, nv: prefill_slot(cfg, p, c, s, t, nv))
+        self._reset = jax.jit(lambda c, slot: reset_slot(c, slot))
 
     @staticmethod
     def _resolve_plan_policy(compute: str, plan_policy: Optional[str],
@@ -346,17 +428,35 @@ class Engine:
         if inject and self.faults is not None:
             self.faults.maybe_fail_compile(bucket.key)
         toks = jnp.full((st.bucket.batch, 1), self.pad_token, jnp.int32)
-        logits, _ = self._dec(st.qparams, st.cache0, toks)   # compile
+        ones = jnp.ones((st.bucket.batch,), jnp.int32)
+        logits, _ = self._dec(st.qparams, st.cache0, toks, ones)  # compile
         jax.block_until_ready(logits)
+        self._compile_aux(st)
         t0 = self.clock()
-        logits, _ = self._dec(st.qparams, st.cache0, toks)   # measure
+        logits, _ = self._dec(st.qparams, st.cache0, toks, ones)  # measure
         jax.block_until_ready(logits)
-        st.step_s = max(self.clock() - t0, 1e-9)
+        st.decode_s = max(self.clock() - t0, 1e-9)
         st.warmed = True
         util = packed_utilization(st.qparams, st.bucket.batch)
         self.metrics.set_bucket_utilization(
             bucket.key, {k: v for k, v in util.items() if k != "layers"})
         return st
+
+    def _compile_aux(self, st: _BucketState) -> None:
+        """Compile the per-slot prefill and slot-reset programs during
+        warmup: a mid-wave join must never pay a JIT compile in the
+        middle of live traffic (outputs are discarded — jax is
+        functional, ``cache0`` is untouched)."""
+        import jax
+        import jax.numpy as jnp
+        if self.prefill_chunk > 1:
+            ptoks = jnp.full((1, self.prefill_chunk), self.pad_token,
+                             jnp.int32)
+            cache = self._pre(st.qparams, st.cache0, 0, ptoks,
+                              jnp.ones((1,), jnp.int32))
+            jax.block_until_ready(cache["index"])
+        cache = self._reset(st.cache0, 0)
+        jax.block_until_ready(cache["index"])
 
     def prewarm_fallback(self) -> None:
         """Build and compile the degraded fallback path ahead of
@@ -380,12 +480,32 @@ class Engine:
         return {key: st.health for key, st in sorted(self._states.items())
                 if key != FALLBACK_KEY}
 
-    def _est_wave_s(self) -> float:
+    def _est_wave_s(self, request: Optional[Request] = None) -> float:
+        """One wave's estimated wall clock, from the *decode* EMA —
+        prefill iterations are tracked separately so replay-heavy
+        waves cannot skew admission for decode-heavy traffic.
+
+        With ``request`` the estimate resolves the request's own
+        bucket first (``bucket_for``) and uses that bucket's EMA — a
+        tight-deadline request bound for a small/fast bucket used to
+        be rejected against the *slowest* warmed bucket's estimate.
+        Without a request (flush heuristics), the conservative max
+        over warmed buckets is kept."""
         warmed = [st for key, st in self._states.items()
                   if st.warmed and key != FALLBACK_KEY]
         if not warmed:
             return 0.0
-        return max(st.step_s * (st.bucket.s_max - 1) for st in warmed)
+        if request is not None:
+            try:
+                bucket = bucket_for(request, self.buckets,
+                                    unavailable=self.batcher.quarantined())
+            except (BucketUnavailable, ValueError):
+                bucket = None
+            if bucket is not None:
+                st = self._states.get(bucket.key)
+                if st is not None and st.warmed:
+                    return st.decode_s * (st.bucket.s_max - 1)
+        return max(st.decode_s * (st.bucket.s_max - 1) for st in warmed)
 
     # -- request admission -------------------------------------------------
 
@@ -416,7 +536,7 @@ class Engine:
             self.metrics.record_malformed()
             raise ValueError(f"malformed request: {e}") from e
         try:
-            self.batcher.submit(req, est_wave_s=self._est_wave_s())
+            self.batcher.submit(req, est_wave_s=self._est_wave_s(req))
         except BucketUnavailable:
             # fits only a quarantined bucket: degraded fallback path
             if self.depth() >= self.batcher.queue_budget:
@@ -435,7 +555,19 @@ class Engine:
         return req.rid
 
     def depth(self) -> int:
-        return self.batcher.depth() + len(self._fallback_pending)
+        """Unfinished engine-held requests: queued, fallback-pending,
+        and sessions in flight on a resumable wave."""
+        return (self.batcher.depth() + len(self._fallback_pending)
+                + self._inflight())
+
+    def _inflight(self) -> int:
+        return sum(len(st.sessions.active())
+                   for st in self._states.values() if st.wave is not None)
+
+    def busy(self) -> bool:
+        """True while a wave is mid-flight — the next ``step()`` will
+        advance it (load generators should loop, not sleep)."""
+        return self._active is not None
 
     # -- terminal outcomes -------------------------------------------------
 
@@ -517,14 +649,19 @@ class Engine:
     # -- execution ---------------------------------------------------------
 
     def step(self, force: bool = False) -> List[Completion]:
-        """Run at most one wave: shed expired requests, pull a ready
-        batch (``force=True`` flushes a partial bucket — the drain
-        path) and decode it to completion; when no bucket flushes,
+        """Advance the engine: shed expired requests, then either
+        continue the active wave by ``wave_quantum`` iterations
+        (pulling queued requests into freed slots — mid-wave joins) or
+        start a new wave from a ready batch (``force=True`` flushes a
+        partial bucket — the drain path); when no bucket flushes,
         serve one degraded-fallback request if any is pending.
-        Returns the wave's completions."""
+        Returns the completions this call produced."""
         self.metrics.sample_depth(self.depth())
         self._tick_breakers()
         self._shed_expired()
+        if self._active is not None:
+            st = self._states[self._active]
+            return self._advance_and_settle(st, self.wave_quantum)
         got = self.batcher.ready(est_wave_s=self._est_wave_s(),
                                  force=force)
         if got is not None:
@@ -550,13 +687,18 @@ class Engine:
     # -- snapshot / restore (engine restart with zero lost requests) ------
 
     def snapshot(self) -> Dict[str, Any]:
-        """JSON-able queue + session-table snapshot.  Waves run to
-        completion synchronously, so between ``step()`` calls the only
-        engine-held requests are queued ones — the snapshot captures
-        them all, plus the rid watermark so a restarted engine never
-        reuses an old rid."""
+        """JSON-able queue + session-table snapshot.  Waves are
+        resumable, so between ``step()`` calls the engine may hold
+        queued requests *and* sessions mid-flight on an active wave —
+        the snapshot serializes both (in-flight sessions as their
+        requests, partial tokens discarded: decode is deterministic,
+        so the restored engine regenerates them bit-exactly), plus the
+        rid watermark so a restarted engine never reuses an old rid."""
+        inflight = [s.request for st in self._states.values()
+                    if st.wave is not None
+                    for _, s in st.sessions.active()]
         queued = (self.batcher.snapshot_requests()
-                  + list(self._fallback_pending))
+                  + list(self._fallback_pending) + inflight)
         queued.sort(key=lambda r: r.rid)
         return {
             "version": 1,
@@ -587,85 +729,213 @@ class Engine:
 
     # -- wave execution ----------------------------------------------------
 
-    def _decode_wave(self, st: _BucketState, requests: List[Request], *,
-                     inject: bool
-                     ) -> Tuple[List[Completion], List[Request],
-                                Optional[Exception]]:
-        """Run one wave on ``st``; returns (completions, unfinished
-        requests, error).  On error the session table is reset and the
-        unfinished requests (tokens discarded — decode is
-        deterministic, a retry reproduces them) are handed back;
-        completions that finished before the fault are kept."""
+    def _expected_iters(self, requests: Sequence[Request]) -> int:
+        """Iterations the initial batch needs: ceil((P-1)/C) chunked
+        prefill steps plus new_tokens decode steps, maxed over the
+        batch (the fault schedule's window)."""
+        c = self.prefill_chunk
+        return max(-(-(len(r.prompt) - 1) // c) + r.new_tokens
+                   for r in requests)
+
+    def _start_wave(self, st: _BucketState, requests: List[Request], *,
+                    inject: bool, allow_joins: bool) -> None:
+        self.metrics.record_start()
+        start_t = self.clock()
+        for r in requests:
+            st.sessions.join(Session(request=r, start_t=start_t))
+        st.cache = st.cache0                    # pristine, reused
+        window = max(self._expected_iters(requests), 1)
+        injecting = inject and self.faults is not None
+        wf = self.faults.begin_wave(st.bucket.key, window) \
+            if injecting else WaveFaults()
+        st.wave = _WaveState(faults=wf, allow_joins=allow_joins,
+                             inject=injecting, sched_window=window,
+                             skew_s=wf.skew_s, requests=len(requests))
+
+    def _pull_joiners(self, st: _BucketState) -> None:
+        """Fill freed slots from the bucket's queue *mid-wave*: the
+        slot's cache column is reset (``reset_slot``) so the joining
+        session starts from position 0 while its neighbours keep
+        decoding — the per-slot ``index[B]`` contract is what makes
+        this sound.  Expired requests found here are shed, not run."""
+        free = st.sessions.free_slots()
+        if not st.wave.allow_joins or free == 0:
+            return
+        pulled = self.batcher.take(st.bucket, free)
+        if not pulled:
+            return
+        now = self.clock()
+        for r in pulled:
+            tr = r.time_remaining(now)
+            if tr is not None and tr <= 0:
+                self._shed([r])
+                continue
+            slot = st.sessions.join(Session(request=r, start_t=now,
+                                            midwave=True))
+            st.cache = self._reset(st.cache, slot)
+            st.wave.requests += 1
+            self.metrics.record_join()
+
+    def _wave_iteration(self, st: _BucketState) -> List[Completion]:
+        """One iteration of the active wave: slots with teacher-forced
+        prompt left take a chunked prefill step while the remaining
+        active slots take a decode step — in the SAME iteration, on
+        disjoint slots (the decode advance mask freezes mid-prefill
+        slots).  Joiners therefore never stall their decoding
+        neighbours.  May raise — the caller turns that into a breaker
+        event."""
         import jax
         import jax.numpy as jnp
-        bucket = st.bucket
-        self.metrics.record_start()
-        table = st.sessions
-        start_t = self.clock()
-        for r in requests:                      # join at the wave boundary
-            table.join(Session(request=r, start_t=start_t))
-
+        w, bucket, table = st.wave, st.bucket, st.sessions
+        self._pull_joiners(st)
+        if w.inject and w.iters - w.sched_base >= w.sched_window:
+            # a continuous wave can outlive any batch: redraw the fault
+            # schedule every expected-wave window so injection
+            # frequency tracks work done, not wave boundaries
+            w.sched_base = w.iters
+            w.faults = self.faults.begin_wave(bucket.key, w.sched_window)
+            w.skew_s += w.faults.skew_s
+        if w.faults.fail_at_step is not None \
+                and w.iters - w.sched_base == w.faults.fail_at_step:
+            raise InjectedFault(
+                "kernel_loss", f"{bucket.key} step {w.iters}")
         b, vocab = bucket.batch, self.cfg.vocab
-        toks = np.full((b, 1), self.pad_token, np.int32)
-        for slot, s in table.active():
-            toks[slot, 0] = s.request.prompt[0]
-        cache = st.cache0                       # reused across waves
-        max_steps = max(s.prompt_len - 1 + s.request.new_tokens
-                        for _, s in table.active())
-        wf = self.faults.begin_wave(bucket.key, max_steps) \
-            if (inject and self.faults is not None) else WaveFaults()
-        completions: List[Completion] = []
-        steps = 0
+        active = table.active()
+        c = self.prefill_chunk
+        prefilling = [(slot, s) for slot, s in active
+                      if c > 1 and s.fed < s.prompt_len - 1]
+        pref_slots = {slot for slot, _ in prefilling}
+        decoding = [(slot, s) for slot, s in active
+                    if slot not in pref_slots]
+        w.iters += 1
+        if prefilling:
+            t0 = self.clock()
+            cache = st.cache
+            for slot, s in prefilling:
+                n = min(c, s.prompt_len - 1 - s.fed)
+                toks = np.full((1, c), self.pad_token, np.int32)
+                toks[0, :n] = s.request.prompt[s.fed:s.fed + n]
+                cache = self._pre(st.qparams, cache, slot,
+                                  jnp.asarray(toks),
+                                  jnp.asarray([n], np.int32))
+                s.fed += n
+            # sync INSIDE the timed loop: the prefill EMA must include
+            # device time
+            jax.block_until_ready(cache["index"])
+            st.cache = cache
+            w.prefill_steps += len(prefilling)
+            w.prefill_wall_s += max(self.clock() - t0, 1e-9)
+            w.busy_slot_steps += len(prefilling)
+        if not decoding:
+            return []
         t0 = self.clock()
-        try:
-            for i in range(max_steps):
-                if wf.fail_at_step is not None and i == wf.fail_at_step:
-                    raise InjectedFault(
-                        "kernel_loss", f"{bucket.key} step {i}")
-                logits, cache = self._dec(st.qparams, cache,
-                                          jnp.asarray(toks))
-                # sync INSIDE the timed loop: per-step wall clock and
-                # completion latencies must include device time
-                jax.block_until_ready(logits)
-                steps += 1
-                last = np.asarray(logits[:, -1, :vocab])
-                nxt = np.full((b, 1), self.pad_token, np.int32)
-                finish_t = self.clock()
-                for slot, s in table.active():
-                    if i + 1 < s.prompt_len:    # teacher-force the prompt
-                        nxt[slot, 0] = s.request.prompt[i + 1]
-                        continue
-                    tok = int(last[slot].argmax())
-                    s.tokens.append(tok)
-                    nxt[slot, 0] = tok
-                    if s.done():                # leave mid-wave: free slot
-                        table.leave(slot)
-                        comp = Completion(
-                            rid=s.request.rid, tokens=tuple(s.tokens),
-                            prompt_len=s.prompt_len,
-                            bucket_key=bucket.key,
-                            submit_t=s.request.submit_t,
-                            start_t=s.start_t, finish_t=finish_t,
-                            deadline=s.request.deadline)
-                        completions.append(comp)
-                        self._set_outcome(comp.rid, "ok", bucket.key)
-                        self.metrics.record_completion(
-                            submit_t=comp.submit_t, start_t=comp.start_t,
-                            finish_t=comp.finish_t,
-                            n_tokens=len(comp.tokens))
-                if not table.active():          # everyone left: end early
-                    break
-                toks = nxt
-        except Exception as e:                  # bucket-local, not fatal
-            unfinished = [s.request for s in table.clear()]
-            return completions, unfinished, e
-        # slow-wave fault: the wall clock reads skewed/slow, inflating
+        toks = np.full((b, 1), self.pad_token, np.int32)
+        for slot, s in decoding:
+            # the next token this slot consumes: its own prompt while
+            # teacher-forcing (fed is this slot's cache position), its
+            # last generated token afterwards
+            toks[slot, 0] = s.request.prompt[s.fed] \
+                if s.fed < s.prompt_len else s.tokens[-1]
+        adv = np.ones((b,), np.int32)
+        for slot in pref_slots:     # mid-prefill slots: no KV write,
+            adv[slot] = 0           # no index move, logits discarded
+        logits, cache = self._dec(st.qparams, st.cache, jnp.asarray(toks),
+                                  jnp.asarray(adv))
+        # sync INSIDE the timed loop: per-step wall clock and
+        # completion latencies must include device time
+        jax.block_until_ready(logits)
+        st.cache = cache
+        w.decode_steps += 1
+        w.decode_wall_s += max(self.clock() - t0, 1e-9)
+        w.busy_slot_steps += len(decoding)
+        last = np.asarray(logits[:, -1, :vocab])
+        finish_t = self.clock()
+        completions: List[Completion] = []
+        for slot, s in decoding:
+            if s.fed < s.prompt_len:
+                s.fed += 1
+                if s.fed < s.prompt_len:        # teacher-forced: output
+                    continue                    # discarded
+            tok = int(last[slot].argmax())
+            s.tokens.append(tok)
+            if s.done():                        # leave mid-wave: free slot
+                table.leave(slot)
+                comp = Completion(
+                    rid=s.request.rid, tokens=tuple(s.tokens),
+                    prompt_len=s.prompt_len, bucket_key=bucket.key,
+                    submit_t=s.request.submit_t,
+                    start_t=s.start_t, finish_t=finish_t,
+                    deadline=s.request.deadline, midwave_join=s.midwave)
+                completions.append(comp)
+                self._set_outcome(comp.rid, "ok", bucket.key)
+                self.metrics.record_completion(
+                    submit_t=comp.submit_t, start_t=comp.start_t,
+                    finish_t=comp.finish_t, n_tokens=len(comp.tokens))
+        return completions
+
+    def _end_wave(self, st: _BucketState) -> None:
+        """Successful wave end: fold this wave's walls into the
+        *separate* prefill/decode EMAs and record occupancy."""
+        w = st.wave
+        # slow-wave fault: the decode wall reads skewed/slow, inflating
         # the step EMA -> est_wave_s -> shedding + admission pressure
-        wall = max(self.clock() - t0, 1e-9) + wf.skew_s
-        st.step_s = 0.5 * st.step_s + 0.5 * (wall / steps)   # EMA
-        self.metrics.record_wave(bucket.key, steps=steps, wall_s=wall,
-                                 requests=len(requests))
-        return completions, [], None
+        if w.decode_steps:
+            per = (w.decode_wall_s + w.skew_s) / w.decode_steps
+            st.decode_s = 0.5 * st.decode_s + 0.5 * per
+        if w.prefill_steps:
+            per = w.prefill_wall_s / w.prefill_steps
+            st.prefill_s = per if st.prefill_s == 0.0 \
+                else 0.5 * st.prefill_s + 0.5 * per
+        self.metrics.record_wave(
+            st.bucket.key, steps=w.iters,
+            wall_s=w.prefill_wall_s + w.decode_wall_s + w.skew_s,
+            requests=w.requests, busy_slot_steps=w.busy_slot_steps,
+            slot_steps=w.iters * st.bucket.batch)
+        st.wave = None
+        st.cache = None
+
+    def _advance_wave(self, st: _BucketState,
+                      max_iters: Optional[int]
+                      ) -> Tuple[List[Completion], List[Request],
+                                 Optional[Exception], bool]:
+        """Run up to ``max_iters`` iterations (``None``: to completion)
+        of the wave on ``st``.  Returns (completions, unfinished
+        requests, error, done).  On error the session table is reset
+        and the unfinished requests (tokens discarded — decode is
+        deterministic, a retry reproduces them) are handed back;
+        completions that finished before the fault are kept."""
+        completions: List[Completion] = []
+        n = 0
+        try:
+            while st.sessions.active():
+                completions.extend(self._wave_iteration(st))
+                n += 1
+                if max_iters is not None and n >= max_iters \
+                        and st.sessions.active():
+                    return completions, [], None, False
+        except Exception as e:                  # bucket-local, not fatal
+            unfinished = [s.request for s in st.sessions.clear()]
+            st.wave = None
+            st.cache = None
+            return completions, unfinished, e, True
+        self._end_wave(st)
+        return completions, [], None, True
+
+    def _advance_and_settle(self, st: _BucketState,
+                            max_iters: Optional[int]
+                            ) -> List[Completion]:
+        """Advance the active wave and settle breaker bookkeeping when
+        it ends (success or failure)."""
+        completions, unfinished, err, done = self._advance_wave(
+            st, max_iters)
+        if done:
+            self._active = None
+            if err is not None:
+                self._on_wave_failure(st.bucket, err, unfinished)
+            else:
+                self._on_wave_success(st.bucket)
+        self.completions.extend(completions)
+        return completions
 
     def _run_wave(self, bucket: BucketShape,
                   requests: List[Request]) -> List[Completion]:
@@ -674,26 +944,25 @@ class Engine:
         except Exception as e:                  # compile failure: breaker
             self._on_wave_failure(bucket, e, requests)
             return []
-        completions, unfinished, err = self._decode_wave(
-            st, requests, inject=True)
-        if err is not None:
-            self._on_wave_failure(bucket, err, unfinished)
-        else:
-            self._on_wave_success(bucket)
-        self.completions.extend(completions)
-        return completions
+        self._start_wave(st, requests, inject=True,
+                         allow_joins=self.midwave_joins)
+        self._active = bucket.key
+        return self._advance_and_settle(st, self.wave_quantum)
 
     def _run_fallback(self, request: Request) -> List[Completion]:
         """Serve one request on the degraded single-request state.
         This is the last line of defense: faults are not injected
-        here, and a failure is the request's terminal ``failed``
-        outcome — never an engine crash."""
+        here, joins never happen (the fallback shape is not a batcher
+        bucket), the wave runs synchronously to completion, and a
+        failure is the request's terminal ``failed`` outcome — never
+        an engine crash."""
         try:
             st = self._fallback_state()
             if not st.warmed:
                 self._warm_state(st)
-            completions, unfinished, err = self._decode_wave(
-                st, [request], inject=False)
+            self._start_wave(st, [request], inject=False,
+                             allow_joins=False)
+            completions, unfinished, err, _ = self._advance_wave(st, None)
         except Exception as e:                  # even setup may fail
             completions, unfinished, err = [], [request], e
         if err is not None:
@@ -709,6 +978,8 @@ class Engine:
         import jax
         import jax.numpy as jnp
         toks = jnp.full((st.bucket.batch, 1), self.pad_token, jnp.int32)
-        logits, _ = self._dec(st.qparams, st.cache0, toks)
+        ones = jnp.ones((st.bucket.batch,), jnp.int32)
+        logits, _ = self._dec(st.qparams, st.cache0, toks, ones)
         jax.block_until_ready(logits)
+        self._compile_aux(st)
         st.warmed = True

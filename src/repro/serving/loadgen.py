@@ -29,6 +29,13 @@ and without faults) and emits the ``BENCH_7.json`` payload: one point
 without faults, one with, each recording p99 / tokens-per-second /
 shed-rate / lost-requests / quarantine-recovery counts.
 
+Continuous-batching mode (``--continuous``) drives identical seeded
+traffic through two engines — mid-wave joins disabled vs enabled —
+and emits the ``BENCH_9.json`` payload: per rate, wave occupancy
+(busy-slot-steps / slot-steps), p99, join counts, and a per-request
+bit-exactness audit of every completion (joiners included) against
+alone-runs of the same specs.
+
 Closed loop (``--mode closed``): ``--users`` concurrent clients, each
 submitting its next request the moment the previous one completes —
 the throughput-saturation view.
@@ -86,6 +93,7 @@ def run_poisson(engine: Engine, *, rate: float, duration_s: float,
                 slo_s: Optional[float] = None,
                 retries: int = 0, backoff_s: float = 0.01,
                 faults: Optional[FaultPlan] = None,
+                admitted_out: Optional[Dict[int, int]] = None,
                 sleep=time.sleep) -> Dict[str, Any]:
     """Drive one engine with a Poisson arrival process; returns the
     metrics snapshot (plus the client-side outcome ledger) after the
@@ -149,7 +157,10 @@ def run_poisson(engine: Engine, *, rate: float, duration_s: float,
             except ValueError:          # no bucket could ever fit it
                 unfittable += 1
                 outcomes[idx] = "rejected"
-        if engine.step():
+        if engine.step() or engine.busy():
+            # progress was made, or a wave is mid-flight (resumable
+            # waves return between iterations so due arrivals can join
+            # freed slots) — loop straight back, never sleep
             continue
         if events:                      # idle until the next event
             wait = events[0][0] - (engine.clock() - t0)
@@ -157,6 +168,8 @@ def run_poisson(engine: Engine, *, rate: float, duration_s: float,
                 sleep(min(wait, 5e-3))
         elif engine.depth():
             engine.step(force=True)     # tail drain: partial buckets
+    if admitted_out is not None:        # request index -> engine rid
+        admitted_out.update(admitted)   # (bit-exactness verification)
     # resolve admitted requests against the engine's outcome ledger;
     # an admitted rid with no terminal outcome was LOST (must be 0)
     lost = 0
@@ -400,6 +413,140 @@ def bench_fault_tolerance(arch: str, *, smoke: bool = True,
     }
 
 
+# ---------------------------------------------------------------------------
+# the BENCH_9 continuous-batching sweep (mid-wave joins)
+# ---------------------------------------------------------------------------
+
+def bench_continuous(arch: str, *, smoke: bool = True,
+                     rates: Sequence[float] = (150.0, 240.0),
+                     duration_s: float = 1.0, prompt_len: int = 8,
+                     new_tokens: int = 8, batch: int = 4,
+                     s_maxes: Sequence[int] = (24, 48),
+                     weight_bits: int = 4, act_bits: int = 8,
+                     prefill_chunk: int = 4, wave_quantum: int = 1,
+                     seed: int = 0, verify: bool = True
+                     ) -> Dict[str, Any]:
+    """Identical seeded Poisson traffic with mid-wave joins disabled
+    vs enabled; each point records p99 latency and wave occupancy
+    (busy-slot-steps / slot-steps).  With joins off, a slot freed by a
+    short request idles until the whole wave retires; with joins on,
+    ``step()`` pulls the oldest fitting queued request into the freed
+    slot every iteration, so occupancy rises and queueing-dominated
+    p99 falls at rates that keep the queue non-empty.
+
+    When ``verify`` is set, every completed request's tokens — joiners
+    included — are compared against an alone-run of the same (prompt,
+    new_tokens) spec on a fresh engine: the continuous-batching path
+    must be bit-exact, not merely close (``bit_exact_mismatches``
+    must be 0).  Alone-runs are cached per spec."""
+    import jax
+
+    from repro.configs.registry import get_arch
+    from repro.models import init_params, values, Rules
+
+    cfg = get_arch(arch)
+    if smoke:
+        cfg = cfg.reduced()
+    rules = Rules(tp=None, fsdp=None, ep=None, batch=())
+    params = values(init_params(cfg, rules, jax.random.PRNGKey(0)))
+    buckets = tuple(BucketShape(batch, s) for s in s_maxes)
+
+    # one verify engine reused across all points; each distinct spec
+    # costs one alone-run (submit + forced drain of a 1-deep queue)
+    verify_engine: Optional[Engine] = None
+    alone_cache: Dict[Any, Optional[tuple]] = {}
+
+    def alone_tokens(prompt, nt):
+        nonlocal verify_engine
+        key = (prompt, nt)
+        if key in alone_cache:
+            return alone_cache[key]
+        if verify_engine is None:
+            verify_engine = Engine(
+                cfg, params, compute="sdv", weight_bits=weight_bits,
+                act_bits=act_bits, buckets=buckets,
+                midwave_joins=False, prefill_chunk=prefill_chunk)
+            for b in buckets:
+                verify_engine.warmup(b)
+        rid = verify_engine.submit(prompt, nt)
+        verify_engine.drain()
+        toks = next((tuple(c.tokens) for c in verify_engine.completions
+                     if c.rid == rid), None)
+        alone_cache[key] = toks
+        return toks
+
+    points: List[Dict[str, Any]] = []
+    for ri, rate in enumerate(rates):
+        # regenerate the offered trace the driver will draw: arrivals
+        # first, then specs, from the same seeded generator — this is
+        # the idx -> (prompt, new_tokens) map the verifier needs
+        trace_rng = np.random.default_rng(seed + ri)
+        arrivals = poisson_arrivals(rate, duration_s, trace_rng)
+        specs = _request_specs(len(arrivals), cfg.vocab, prompt_len,
+                               new_tokens, trace_rng)
+        for joins in (False, True):
+            engine = Engine(cfg, params, compute="sdv",
+                            weight_bits=weight_bits, act_bits=act_bits,
+                            buckets=buckets, midwave_joins=joins,
+                            prefill_chunk=prefill_chunk,
+                            wave_quantum=wave_quantum)
+            for b in buckets:       # steady state: compile cost is
+                engine.warmup(b)    # not charged to early requests
+            admitted: Dict[int, int] = {}
+            snap = run_poisson(engine, rate=rate, duration_s=duration_s,
+                               prompt_len=prompt_len,
+                               new_tokens=new_tokens,
+                               rng=np.random.default_rng(seed + ri),
+                               admitted_out=admitted)
+            checked = midwave_checked = mismatches = 0
+            if verify:
+                by_rid = {c.rid: c for c in engine.completions}
+                for idx, rid in sorted(admitted.items()):
+                    o = engine.outcomes.get(rid)
+                    if o is None or o["outcome"] != "ok":
+                        continue
+                    comp = by_rid.get(rid)
+                    checked += 1
+                    if comp is None:
+                        mismatches += 1
+                        continue
+                    if comp.midwave_join:
+                        midwave_checked += 1
+                    ref = alone_tokens(*specs[idx])
+                    if ref is None or tuple(comp.tokens) != ref:
+                        mismatches += 1
+            points.append({
+                **snap,
+                "midwave_joins": joins,
+                "rate_per_s": rate,
+                "p99_ms": snap["latency"]["p99_ms"],
+                "occupancy": snap["waves"]["occupancy"],
+                "joins": snap["waves"]["midwave_joins"],
+                "tokens_per_s": snap["tokens_per_s"],
+                "bit_exact_checked": checked,
+                "bit_exact_midwave_checked": midwave_checked,
+                "bit_exact_mismatches": mismatches,
+            })
+
+    return {
+        "bench": "continuous_batching",
+        "pr": 9,
+        "arch": cfg.name,
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "buckets": [{"batch": b.batch, "s_max": b.s_max} for b in buckets],
+        "rates_per_s": list(rates),
+        "duration_s": duration_s,
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "prefill_chunk": prefill_chunk,
+        "wave_quantum": wave_quantum,
+        "seed": seed,
+        "bit_exact_verified": verify,
+        "points": points,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -437,6 +584,16 @@ def main(argv=None):
     ap.add_argument("--chaos", action="store_true",
                     help="fault-tolerance sweep: identical traffic with "
                          "and without injected faults (BENCH_7)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching sweep: identical traffic "
+                         "with mid-wave joins off vs on (BENCH_9); use "
+                         "--rates above the BENCH_5 sweep, e.g. 150,240")
+    ap.add_argument("--prefill-chunk", type=int, default=4,
+                    help="teacher-forced prompt tokens per prefill "
+                         "iteration (continuous sweep)")
+    ap.add_argument("--no-verify", dest="verify", action="store_false",
+                    help="skip the per-request alone-run bit-exactness "
+                         "check in the continuous sweep")
     ap.add_argument("--fault-classes", default=",".join(FAULT_CLASSES),
                     help="comma-separated chaos fault classes")
     ap.add_argument("--seed", type=int, default=0)
@@ -444,7 +601,29 @@ def main(argv=None):
                     help="write the payload to this path (atomic)")
     args = ap.parse_args(argv)
 
-    if args.chaos:
+    if args.continuous:
+        payload = bench_continuous(
+            args.arch, smoke=args.smoke,
+            rates=[float(r) for r in args.rates.split(",") if r],
+            duration_s=args.duration,
+            prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+            batch=args.batch,
+            s_maxes=[int(s) for s in args.buckets.split(",") if s],
+            weight_bits=args.weight_bits, act_bits=args.act_bits,
+            prefill_chunk=args.prefill_chunk, seed=args.seed,
+            verify=args.verify)
+        for p in payload["points"]:
+            tag = "joins " if p["midwave_joins"] else "solo  "
+            print(f"{tag}@ {p['rate_per_s']:6.1f} req/s: "
+                  f"{p['requests_completed']} done, "
+                  f"{p['joins']} mid-wave joins, "
+                  f"occupancy {p['occupancy']:.3f}, "
+                  f"p99 {p['p99_ms']:.1f} ms, "
+                  f"{p['tokens_per_s']:.1f} tok/s, "
+                  f"bit-exact {p['bit_exact_checked']} checked "
+                  f"({p['bit_exact_midwave_checked']} joiners) / "
+                  f"{p['bit_exact_mismatches']} mismatches")
+    elif args.chaos:
         payload = bench_fault_tolerance(
             args.arch, smoke=args.smoke,
             rate=[float(r) for r in args.rates.split(",") if r][0],

@@ -22,6 +22,7 @@ layers likewise, their packing is HBM-only).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.ioutil import atomic_write_json
@@ -34,12 +35,18 @@ def write_snapshot(path: str, payload: Any) -> None:
 
 
 def percentile(sorted_vals: List[float], q: float) -> float:
-    """Nearest-rank percentile (q in [0, 100]) of pre-sorted values."""
+    """Nearest-rank percentile (q in [0, 100]) of pre-sorted values:
+    the smallest value with at least q% of the sample at or below it,
+    ``ceil(q/100 * n)`` in one-based ranks — identical to
+    ``numpy.percentile(..., method="inverted_cdf")``.  (This used to
+    round half-even on an *interpolation* index, under-reporting p99
+    whenever ``0.99 * (n-1)`` rounded down — e.g. every n in
+    101..150.)"""
     if not sorted_vals:
         return 0.0
-    idx = max(0, min(len(sorted_vals) - 1,
-                     int(round(q / 100.0 * (len(sorted_vals) - 1)))))
-    return sorted_vals[idx]
+    n = len(sorted_vals)
+    rank = max(1, min(n, math.ceil(q / 100.0 * n)))
+    return sorted_vals[rank - 1]
 
 
 def latency_summary(latencies_s: List[float]) -> Dict[str, float]:
@@ -171,10 +178,13 @@ class EngineMetrics:
     quarantines: int = 0
     recoveries: int = 0
     fallback_waves: int = 0
+    midwave_joins: int = 0          # sessions that joined a running wave
     tokens_out: int = 0
     waves: int = 0
     wave_steps: int = 0
     wave_wall_s: float = 0.0
+    busy_slot_steps: int = 0        # occupied KV slots summed over steps
+    slot_steps: int = 0             # batch-width slots summed over steps
     per_bucket: Dict[str, Dict[str, Any]] = dataclasses.field(
         default_factory=dict)
     started_t: Optional[float] = None
@@ -193,10 +203,13 @@ class EngineMetrics:
         self.finished_t = finish_t
 
     def record_wave(self, bucket_key: str, *, steps: int, wall_s: float,
-                    requests: int) -> None:
+                    requests: int, busy_slot_steps: int = 0,
+                    slot_steps: int = 0) -> None:
         self.waves += 1
         self.wave_steps += steps
         self.wave_wall_s += wall_s
+        self.busy_slot_steps += busy_slot_steps
+        self.slot_steps += slot_steps
         b = self.per_bucket.setdefault(
             bucket_key, {"waves": 0, "steps": 0, "wall_s": 0.0,
                          "requests": 0})
@@ -204,6 +217,11 @@ class EngineMetrics:
         b["steps"] += steps
         b["wall_s"] += wall_s
         b["requests"] += requests
+        b["busy_slot_steps"] = b.get("busy_slot_steps", 0) + busy_slot_steps
+        b["slot_steps"] = b.get("slot_steps", 0) + slot_steps
+
+    def record_join(self) -> None:
+        self.midwave_joins += 1
 
     def record_rejection(self, infeasible: bool = False) -> None:
         self.rejected += 1
@@ -288,6 +306,15 @@ class EngineMetrics:
                 "max": max(depth) if depth else 0,
             },
             "waves": {"count": self.waves, "steps": self.wave_steps,
-                      "wall_s": self.wave_wall_s},
+                      "wall_s": self.wave_wall_s,
+                      "midwave_joins": self.midwave_joins,
+                      "busy_slot_steps": self.busy_slot_steps,
+                      "slot_steps": self.slot_steps,
+                      # wave occupancy: the fraction of compiled batch
+                      # slots that held a live session, summed over
+                      # every wave iteration — the packed datapath is
+                      # only as busy as this number
+                      "occupancy": (self.busy_slot_steps / self.slot_steps
+                                    if self.slot_steps else 0.0)},
             "buckets": self.per_bucket,
         }

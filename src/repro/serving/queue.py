@@ -321,6 +321,20 @@ class ContinuousBatcher:
         take, self._pending[bucket] = q[:bucket.batch], q[bucket.batch:]
         return take
 
+    def take(self, bucket: BucketShape, n: int) -> List[Request]:
+        """Pop up to ``n`` queued requests for ``bucket``, oldest
+        first — the engine's mid-wave join pull: freed KV slots of a
+        running wave refill from the same bucket's queue without
+        waiting for a flush rule.  Quarantined buckets never hand out
+        work (their queues were drained at quarantine time)."""
+        if n <= 0 or bucket in self._quarantined:
+            return []
+        q = self._pending.get(bucket)
+        if not q:
+            return []
+        take, self._pending[bucket] = q[:n], q[n:]
+        return take
+
     # -- snapshot (engine drain/recovery) ----------------------------------
 
     def snapshot_requests(self) -> List[Request]:

@@ -397,6 +397,58 @@ def test_chaos_sweep_zero_lost_bit_exact(tiny_setup):
         assert ref_comp.tokens == c.tokens, (rid, c.bucket_key)
 
 
+def test_chaos_sweep_zero_lost_with_midwave_joins(tiny_setup):
+    """The chaos schedule with mid-wave joins enabled: faults can kill
+    a wave that holds joiners mid-prefill and mid-decode, and freed
+    slots keep refilling between injections.  Every admitted request
+    must still reach exactly one terminal outcome, and joins must
+    actually occur (the sweep is vacuous otherwise)."""
+    cfg, params = tiny_setup
+    clock = FakeClock()
+    faults = FaultPlan.chaos(seed=1)
+    eng = _engine(cfg, params, clock, faults=faults, threshold=2,
+                  cooldown=0.05, buckets=(BucketShape(2, 16),
+                                          BucketShape(2, 24)),
+                  midwave_joins=True, prefill_chunk=4)
+    rng = np.random.default_rng(1)
+    arrivals = poisson_arrivals(60.0, 0.4, rng)
+    specs = _request_specs(len(arrivals), cfg.vocab, 6, 6, rng)
+    t0 = clock()
+    rid_to_spec = {}
+    i = 0
+    while i < len(arrivals) or eng.depth():
+        now = clock() - t0
+        while i < len(arrivals) and arrivals[i] <= now:
+            p, nt = specs[i]
+            arrived = t0 + arrivals[i]
+            try:
+                rid = eng.submit(p, nt, submit_t=arrived,
+                                 deadline=arrived + 2.0)
+                rid_to_spec[rid] = (p, nt)
+            except Backpressure:
+                pass
+            i += 1
+        if eng.step():
+            continue
+        if i < len(arrivals):
+            clock.advance(max(arrivals[i] - (clock() - t0), 1e-4))
+        elif eng.depth():
+            eng.step(force=True)
+
+    assert set(eng.outcomes) == set(rid_to_spec)        # ZERO lost
+    assert all(o["outcome"] in ("ok", "shed", "failed")
+               for o in eng.outcomes.values())
+    ok = [r for r, o in eng.outcomes.items() if o["outcome"] == "ok"]
+    comps = {c.rid: c for c in eng.completions}
+    assert sorted(ok) == sorted(comps) and len(ok) > 0
+    for rid in ok:
+        assert len(comps[rid].tokens) == rid_to_spec[rid][1]
+    # joins really happened under injection, and some joiners finished
+    assert eng.metrics.midwave_joins > 0
+    assert any(comps[r].midwave_join for r in ok)
+    assert faults.counts().get("kernel_loss", 0) >= 1
+
+
 def test_run_poisson_chaos_ledger(tiny_setup):
     """The loadgen-level chaos drive: retries with seeded backoff,
     malformed extras riding along, and a client-side ledger where

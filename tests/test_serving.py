@@ -473,3 +473,138 @@ def test_bench_serving_payload_schema(tmp_path):
                for u in payload["bucket_plans"].values())
     # round-trips through JSON (the BENCH_5 writer)
     json.loads(json.dumps(payload))
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: per-slot positions + mid-wave joins (PR 9)
+# ---------------------------------------------------------------------------
+
+def test_midwave_join_bit_exact_vs_alone(tiny_setup):
+    """A request that joins a freed slot while the wave is mid-flight
+    must produce byte-identical tokens to running alone — the per-slot
+    ``index[B]`` contract plus ``reset_slot`` make the joiner's
+    computation independent of everything the slot saw before."""
+    cfg, params = tiny_setup
+    eng = Engine(cfg, params, compute="sdv",
+                 buckets=(BucketShape(2, 24),), midwave_joins=True,
+                 prefill_chunk=4)
+    specs = {"long": ((1, 2, 3, 4, 5), 10), "short": ((6, 7), 2),
+             "join": ((8, 9, 10, 11), 5)}
+    r_long = eng.submit(*specs["long"])
+    r_short = eng.submit(*specs["short"])    # bucket full: wave starts
+    comps = []
+    for _ in range(200):                     # run until the short one
+        comps.extend(eng.step())             # frees its slot mid-wave
+        if any(c.rid == r_short for c in comps):
+            break
+    assert eng.busy()                        # long one still decoding
+    r_join = eng.submit(*specs["join"])      # queued while mid-flight
+    for _ in range(400):
+        comps.extend(eng.step(force=True))
+        if not eng.depth() and not eng.busy():
+            break
+    got = {c.rid: c for c in comps}
+    assert sorted(got) == sorted([r_long, r_short, r_join])
+    assert got[r_join].midwave_join          # it really joined mid-wave
+    assert not got[r_long].midwave_join
+    assert eng.metrics.midwave_joins == 1
+    for key, rid in (("long", r_long), ("short", r_short),
+                     ("join", r_join)):
+        prompt, nt = specs[key]
+        alone_rid = eng.submit(prompt, nt)   # same engine, same jit
+        alone = {c.rid: c for c in eng.drain()}[alone_rid]
+        assert alone.tokens == got[rid].tokens, key
+        assert len(got[rid].tokens) == nt
+
+
+def test_per_slot_snapshot_restore_midwave(tiny_setup):
+    """Snapshot taken while a wave is mid-flight serializes the
+    in-flight sessions as requests; restoring into a fresh engine
+    replays them to completion with the original rids and bit-exact
+    tokens (decode is deterministic)."""
+    cfg, params = tiny_setup
+    buckets = (BucketShape(2, 24),)
+    a = Engine(cfg, params, compute="sdv", buckets=buckets)
+    specs = [((1, 2, 3), 4), ((4, 5, 6, 7), 3)]
+    rids = [a.submit(p, nt) for p, nt in specs]
+    a.step()                      # wave starts: sessions are in flight
+    assert a.busy()
+    snap = a.snapshot()
+    json.loads(json.dumps(snap))              # JSON round-trips
+    assert sorted(r["rid"] for r in snap["requests"]) == sorted(rids)
+    b = Engine(cfg, params, compute="sdv", buckets=buckets)
+    assert b.restore(snap) == len(specs)
+    comps = {c.rid: c for c in b.drain()}
+    assert sorted(comps) == sorted(rids)      # zero lost mid-wave
+    c_eng = Engine(cfg, params, compute="sdv", buckets=buckets)
+    c_rids = [c_eng.submit(p, nt) for p, nt in specs]
+    c_comps = {r.rid: r for r in c_eng.drain()}
+    for rid, crid in zip(rids, c_rids):
+        assert comps[rid].tokens == c_comps[crid].tokens
+
+
+def test_est_wave_s_uses_request_bucket(tiny_setup):
+    """Admission estimates from the *resolved* bucket's decode EMA —
+    the old max-over-all-warmed-buckets estimate rejected tight
+    deadlines bound for a fast bucket against the slowest bucket."""
+    cfg, params = tiny_setup
+    clock = FakeClock()
+    eng = Engine(cfg, params, compute="sdv", clock=clock,
+                 buckets=(BucketShape(2, 16), BucketShape(2, 48)))
+    fast = eng._state(BucketShape(2, 16))
+    slow = eng._state(BucketShape(2, 48))
+    fast.warmed, fast.decode_s = True, 0.001   # 15 ms estimated wave
+    slow.warmed, slow.decode_s = True, 1.0     # 47 s estimated wave
+    assert eng._est_wave_s() == pytest.approx(47.0)   # conservative
+    req = Request(prompt=(1, 2, 3), new_tokens=2)     # fits b2.s16
+    assert eng._est_wave_s(req) == pytest.approx(0.015)
+    # the regression: a tight deadline for the fast bucket is admitted
+    rid = eng.submit((1, 2, 3), 2, deadline=clock() + 1.0)
+    assert rid >= 0
+
+
+def test_prefill_decode_emas_separate(tiny_setup):
+    """Chunked prompt replay and decode feed separate step-time EMAs,
+    and admission uses the decode one — prefill-heavy waves must not
+    skew ``est_wave_s`` for decode-dominated traffic."""
+    cfg, params = tiny_setup
+    eng = Engine(cfg, params, compute="sdv",
+                 buckets=(BucketShape(2, 24),), prefill_chunk=4)
+    for p, nt in [(tuple(range(1, 9)), 2), (tuple(range(2, 10)), 2)]:
+        eng.submit(p, nt)
+    eng.drain()
+    st = eng._states["b2.s24"]
+    assert st.prefill_s > 0.0 and st.decode_s > 0.0
+    assert eng._est_wave_s() == pytest.approx(st.decode_s * 23)
+
+
+def test_percentile_nearest_rank_matches_numpy():
+    """True nearest-rank (ceil) percentile — pinned against numpy's
+    ``inverted_cdf``.  The old round-half-even interpolation
+    under-reported p99 for n in 101..150."""
+    from repro.serving.metrics import percentile
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 7, 99, 100, 101, 120, 149, 150, 151, 1000):
+        vals = sorted(rng.standard_normal(n).tolist())
+        for q in (1.0, 50.0, 90.0, 95.0, 99.0, 100.0):
+            want = float(np.percentile(vals, q, method="inverted_cdf"))
+            assert percentile(vals, q) == want, (n, q)
+
+
+def test_bench_continuous_payload_schema(tmp_path):
+    """BENCH_9 payload: joins on/off per rate, occupancy + p99 + the
+    per-request bit-exactness audit (which must report 0 mismatches)."""
+    from repro.serving.loadgen import bench_continuous
+    payload = bench_continuous(
+        "tinyllama-1.1b", smoke=True, rates=[130.0], duration_s=0.2,
+        prompt_len=6, new_tokens=6, batch=2, s_maxes=[16],
+        weight_bits=4, act_bits=8, prefill_chunk=4, seed=0, verify=True)
+    assert payload["bench"] == "continuous_batching" and payload["pr"] == 9
+    assert [p["midwave_joins"] for p in payload["points"]] == [False, True]
+    solo, joins = payload["points"]
+    for p in (solo, joins):
+        assert 0.0 <= p["occupancy"] <= 1.0
+        assert p["p99_ms"] >= 0 and p["bit_exact_mismatches"] == 0
+        assert p["bit_exact_checked"] == p["requests_completed"] > 0
+    assert solo["joins"] == 0
+    assert joins["bit_exact_midwave_checked"] == joins["joins"]
