@@ -1,6 +1,7 @@
 .PHONY: test dev-deps planner-smoke planner-test test-datapaths \
         test-wide-words serve-smoke test-serving chaos-smoke test-chaos \
-        continuous-smoke test-continuous qat-smoke test-qat
+        continuous-smoke test-continuous qat-smoke test-qat \
+        spec-smoke test-spec
 
 # tier-1 verify (ROADMAP.md): the whole suite, fail-fast, quiet
 test:
@@ -59,6 +60,18 @@ test-continuous:
 	PYTHONPATH=src python -m pytest -q tests/test_serving.py \
 	    tests/test_chaos.py -k "midwave or continuous or percentile \
 	    or est_wave or emas or per_slot"
+
+# speculative decoding: spec-off vs spec-on on the same seeded trace
+# with the alone-run bit-exactness audit (scratch run, not the tracked
+# BENCH_10), plus the verify/rollback/engine spec test file
+spec-smoke:
+	PYTHONPATH=src python -m repro.serving.loadgen --speculative \
+	    --arch tinyllama-1.1b --smoke --rates 50 --duration 0.4 \
+	    --prompt-len 6 --new-tokens 8 --batch 4 --buckets 24,48 \
+	    --train-steps 80
+
+test-spec:
+	PYTHONPATH=src python -m pytest -q tests/test_spec.py
 
 # packed QAT: a short --qat launcher run (STE packed forward, bitwidth
 # search warming a plan cache, serving-ready export), and its test file

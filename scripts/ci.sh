@@ -245,7 +245,10 @@ def count_sdv(t):
 
 n_sdv = count_sdv(served)
 assert n_sdv == res["qat_layers"], (n_sdv, res["qat_layers"])
-w = wrapped[0]
+# ste_dense takes a single [in, out] kernel; stacked block layers
+# ([layers, in, out]) are sliced by the apply path, so probe an
+# unstacked wrapped layer here (lm_head)
+w = next(w for w in wrapped if w.kernel.ndim == 2)
 x = jnp.asarray(np.random.default_rng(0).standard_normal(
     (2, w.kernel.shape[-2])), jnp.float32)
 y_p = ste.ste_dense(x, w.kernel, w.w_bits, w.a_bits, w.plan, w.use_kernel)
@@ -284,5 +287,79 @@ assert g["wire_bytes_per_element"]["packed"] * 2 \
 print(f"BENCH_8.json ok: {q['qat_layers']} QAT layers, eval gap "
       f"{q['eval_gap_vs_float_init']:+.4f}, cache-served buckets "
       f"{sorted(c['bucket_plans'])}, packed grad AR exact")
+PY
+# speculative smoke: the tiny arch through the spec-off/spec-on A/B at
+# one rate — draft + verify programs must compile (spec_on per bucket),
+# at least one verification wave must land a multi-token acceptance,
+# and the per-request alone-run audit must report ZERO mismatches on
+# both curves (greedy acceptance is exact or it is broken)
+BENCH10_SMOKE="${TMPDIR:-/tmp}/bench10_smoke.json"
+python -m repro.serving.loadgen --arch tinyllama-1.1b --smoke \
+    --speculative --rates 50 --duration 0.4 --prompt-len 6 \
+    --new-tokens 8 --batch 4 --buckets 24,48 --train-steps 80 \
+    --json "$BENCH10_SMOKE"
+python - "$BENCH10_SMOKE" <<'PY'
+import json, sys
+payload = json.load(open(sys.argv[1]))
+assert payload["bench"] == "speculative_decoding", payload.get("bench")
+pts = {p["speculative"]: p for p in payload["points"]}
+assert set(pts) == {False, True}, set(pts)
+spec = pts[True]
+assert spec["spec_counters"]["rounds"] > 0, "no verification waves ran"
+assert spec["spec_degraded"] == 0, spec["spec_counters"]
+assert any(int(k) >= 2 for k in spec["acceptance_hist"]), \
+    spec["acceptance_hist"]                 # >=1 multi-token acceptance
+for p in pts.values():
+    assert p["bit_exact_checked"] > 0, p
+    assert p["bit_exact_mismatches"] == 0, p
+assert payload["plan_table"], "no draft/target plan table"
+for rep in payload["plan_table"].values():
+    assert rep["spec_on"] is True, rep      # draft + verify compiled
+    assert all(l["draft_denser"] for l in rep["layers"]), rep["layers"]
+print(f"spec smoke ok: {spec['spec_counters']['rounds']} rounds, "
+      f"mean accepted {spec['mean_accepted']:.2f}, tok/target-wave "
+      f"{pts[False]['tokens_per_target_wave']:.2f} -> "
+      f"{spec['tokens_per_target_wave']:.2f}, 0 mismatches")
+PY
+# ... and the tracked BENCH_10 payload: identical seeded traffic
+# spec-off vs spec-on at >=3 rates — speculation must win effective
+# tokens-per-target-wave by >1.3x at EVERY rate with p99 no worse,
+# zero bit-exactness mismatches on both curves, zero degraded buckets,
+# and every draft GEMM strictly denser than the target's on the same
+# datapath (the paper's density law doing the drafting)
+python - BENCH_10.json <<'PY'
+import json, sys
+payload = json.load(open(sys.argv[1]))
+assert payload["bench"] == "speculative_decoding" and payload["pr"] == 10
+assert payload["bit_exact_verified"] is True, "audit was skipped"
+rates = sorted({p["rate_per_s"] for p in payload["points"]})
+assert len(rates) >= 3, rates
+for rate in rates:
+    pts = {p["speculative"]: p for p in payload["points"]
+           if p["rate_per_s"] == rate}
+    assert set(pts) == {False, True}, (rate, set(pts))
+    plain, spec = pts[False], pts[True]
+    ratio = spec["tokens_per_target_wave"] \
+        / plain["tokens_per_target_wave"]
+    assert ratio > 1.3, (rate, ratio)
+    assert spec["p99_ms"] <= plain["p99_ms"], (rate, spec["p99_ms"],
+                                               plain["p99_ms"])
+    assert spec["spec_degraded"] == 0, (rate, spec["spec_counters"])
+    for p in (plain, spec):
+        assert p["bit_exact_checked"] > 0, (rate, p)
+        assert p["bit_exact_mismatches"] == 0, (rate, p)
+assert payload["plan_table"], "no draft/target plan table"
+for key, rep in payload["plan_table"].items():
+    assert rep["spec_on"] is True, (key, rep)
+    assert rep["layers"] and all(l["draft_denser"]
+                                 for l in rep["layers"]), (key, rep)
+print("BENCH_10.json ok: " + "; ".join(
+    f"{r:g}/s {pts[True]['tokens_per_target_wave']:.2f} vs "
+    f"{pts[False]['tokens_per_target_wave']:.2f} tok/wave "
+    f"({pts[True]['tokens_per_target_wave'] / pts[False]['tokens_per_target_wave']:.2f}x), "
+    f"p99 {pts[True]['p99_ms']:.1f}<={pts[False]['p99_ms']:.1f} ms"
+    for r in rates
+    for pts in [{p["speculative"]: p for p in payload["points"]
+                 if p["rate_per_s"] == r}]))
 PY
 exec python -m pytest -x -q "$@"

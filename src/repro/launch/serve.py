@@ -123,10 +123,17 @@ def _run_engine(cfg, args, params):
                                   for s in s_maxes),
                     breaker_threshold=2 if args.chaos else 3,
                     breaker_cooldown_s=0.2 if args.chaos else 2.0,
+                    speculative=args.speculative,
+                    spec_k=args.spec_k,
+                    draft_bits=args.draft_bits,
+                    draft_act_bits=args.draft_act_bits,
                     faults=faults)
+    spec_note = (f", speculative k={args.spec_k} "
+                 f"(draft W{args.draft_bits}A{args.draft_act_bits})"
+                 if args.speculative else "")
     print(f"{cfg.name}: engine, {args.packed_compute} compute, "
           f"plan policy {engine.plan_policy}, buckets "
-          f"{[b.key for b in engine.buckets]}"
+          f"{[b.key for b in engine.buckets]}{spec_note}"
           + (f", chaos seed {args.chaos_seed}" if args.chaos else ""))
 
     rng = np.random.default_rng(0)
@@ -163,6 +170,17 @@ def _run_engine(cfg, args, params):
         print(f"bucket {key}: {util['kernel_routed_layers']}/"
               f"{util['packed_layers']} packed layers on kernel routes, "
               f"density {util['density_achieved']:.2f} MACs/multiply")
+    if args.speculative:
+        sp = snap["speculative"]
+        print(f"speculative: {sp['rounds']} rounds, "
+              f"mean accepted {sp['mean_accepted']:.2f}, "
+              f"tok/target-wave {sp['tokens_per_target_wave']:.2f}, "
+              f"acceptance hist {sp['acceptance_hist']}")
+        for key, rep in engine.spec_report().items():
+            denser = sum(1 for l in rep["layers"] if l["draft_denser"])
+            print(f"bucket {key}: spec_on={rep['spec_on']}, "
+                  f"{denser}/{len(rep['layers'])} draft layers "
+                  f"strictly denser")
     if comps:
         print("sample:", list(comps[0].tokens)[:12])
 
@@ -193,6 +211,15 @@ def main():
                          "schedule (FaultPlan.chaos) and print the "
                          "health/fault summary")
     ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--speculative", action="store_true",
+                    help="engine: self-speculation draft + single-wave "
+                         "verification (greedy-exact, DESIGN.md §5.2)")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="drafted tokens per verification wave")
+    ap.add_argument("--draft-bits", type=int, default=4,
+                    help="draft weight bits")
+    ap.add_argument("--draft-act-bits", type=int, default=4,
+                    help="draft activation bits (the density knob)")
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--weight-bits", type=int, default=4)

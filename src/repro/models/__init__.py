@@ -2,7 +2,8 @@
 from .param import Init, Rules, P, values, specs, is_p
 from .transformer import (decode_step, forward, init_cache, init_params,
                           prefill_slot, prefill_step,
-                          reset_slot)
+                          reset_slot, rollback_slot, verify_slot,
+                          verify_step)
 from .quantized import (BSEGConv, PackedLinear, SDVLinear,
                         bseg_conv_apply, default_bseg_plan,
                         default_sdv_plan, materialize, pack_conv_bseg,
@@ -10,7 +11,8 @@ from .quantized import (BSEGConv, PackedLinear, SDVLinear,
 
 __all__ = ["Init", "Rules", "P", "values", "specs", "is_p", "decode_step",
            "forward", "init_cache", "init_params", "prefill_slot", "prefill_step",
-           "reset_slot", "BSEGConv",
+           "reset_slot", "rollback_slot", "verify_slot", "verify_step",
+           "BSEGConv",
            "PackedLinear", "SDVLinear", "bseg_conv_apply",
            "default_bseg_plan", "default_sdv_plan", "materialize",
            "pack_conv_bseg", "pack_linear", "pack_linear_sdv",

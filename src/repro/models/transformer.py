@@ -756,22 +756,13 @@ def reset_slot(cache, slot):
     return out
 
 
-def prefill_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray,
-                 n_valid: jnp.ndarray):
-    """One chunked-prefill step for the KV-cache families.
-
-    tokens [B, C] int32 — a teacher-forced prompt chunk per slot,
-    zero-padded; n_valid [B] int32 in [0, C] says how many columns of
-    each row are real.  Slots with n_valid == 0 (decoding or empty)
-    are untouched: their writes drop out of bounds and their index
-    does not advance.  A long prompt therefore stalls a wave of
-    decoders for ceil(P/C) iterations instead of P.  Returns the new
-    cache only — prefill logits are never sampled.
-
-    Families with recurrent state (ssm/hybrid) and encdec replay
-    prompts one token per ``decode_step`` instead (chunk = 1): their
-    per-token state update is inherently sequential.
-    """
+def _prefill_forward(cfg: ArchConfig, params, cache, tokens: jnp.ndarray,
+                     n_valid: jnp.ndarray):
+    """Shared chunked teacher-forcing core for the KV-cache families:
+    returns (final hidden states [B, C, d], new cache).  ``prefill_step``
+    discards the hidden states (cache-only prompt replay);
+    ``verify_step`` unembeds them (speculative verification needs the
+    logits at every fed position)."""
     if cfg.family not in ("dense", "moe", "vlm"):
         raise ValueError(f"prefill_step: unsupported family {cfg.family}")
     b = tokens.shape[0]
@@ -814,10 +805,10 @@ def prefill_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray,
         xs = tuple([params["blocks"]]
                    + [params[f"blocks_dense{i}"] for i in range(1, me)]
                    + [kg, vg])
-        _, (nk, nv) = _layer_loop(cfg, body, x, xs, n_groups)
+        x, (nk, nv) = _layer_loop(cfg, body, x, xs, n_groups)
         nk = nk.reshape(cache["k"].shape)
         nv = nv.reshape(cache["v"].shape)
-        return dict(cache, k=nk, v=nv, index=index + n_valid)
+        return x, dict(cache, k=nk, v=nv, index=index + n_valid)
     if kv8:
         def body(xc, sl):
             bp, kc, vc, ks, vs = sl
@@ -826,22 +817,106 @@ def prefill_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray,
                                       ks=ks, vs=vs)
             return y, (nk, nv, nks, nvs)
 
-        _, (nk, nv, nks, nvs) = _layer_loop(
+        x, (nk, nv, nks, nvs) = _layer_loop(
             cfg, body, x, (params["blocks"], cache["k"], cache["v"],
                            cache["k_scale"], cache["v_scale"]),
             cfg.n_layers)
-        return dict(cache, k=nk, v=nv, k_scale=nks, v_scale=nvs,
-                    index=index + n_valid)
+        return x, dict(cache, k=nk, v=nv, k_scale=nks, v_scale=nvs,
+                       index=index + n_valid)
 
     def body(xc, sl):
         bp, kc, vc = sl
         y, nk, nv = one(bp, xc, kc, vc, moe=(cfg.family == "moe"))
         return y, (nk, nv)
 
-    _, (nk, nv) = _layer_loop(
+    x, (nk, nv) = _layer_loop(
         cfg, body, x, (params["blocks"], cache["k"], cache["v"]),
         cfg.n_layers)
-    return dict(cache, k=nk, v=nv, index=index + n_valid)
+    return x, dict(cache, k=nk, v=nv, index=index + n_valid)
+
+
+def prefill_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray,
+                 n_valid: jnp.ndarray):
+    """One chunked-prefill step for the KV-cache families.
+
+    tokens [B, C] int32 — a teacher-forced prompt chunk per slot,
+    zero-padded; n_valid [B] int32 in [0, C] says how many columns of
+    each row are real.  Slots with n_valid == 0 (decoding or empty)
+    are untouched: their writes drop out of bounds and their index
+    does not advance.  A long prompt therefore stalls a wave of
+    decoders for ceil(P/C) iterations instead of P.  Returns the new
+    cache only — prefill logits are never sampled.
+
+    Families with recurrent state (ssm/hybrid) and encdec replay
+    prompts one token per ``decode_step`` instead (chunk = 1): their
+    per-token state update is inherently sequential.
+    """
+    _, new_cache = _prefill_forward(cfg, params, cache, tokens, n_valid)
+    return new_cache
+
+
+def verify_step(cfg: ArchConfig, params, cache, tokens: jnp.ndarray,
+                n_valid: jnp.ndarray):
+    """Logit-returning chunked teacher-forcing: the speculative
+    verification wave (DESIGN.md §5.2).
+
+    tokens [B, C] int32 — per slot, the pending token followed by the
+    draft's proposals; n_valid [B] int32 in [0, C] (0 freezes a slot
+    exactly as in ``prefill_step``).  Returns (logits [B, C, vocab],
+    new cache): column j holds the next-token logits after consuming
+    tokens[:, :j+1].
+
+    The hidden state at a fed position is computed by the SAME layer
+    stack chunked prefill already runs (prefill attention writes KV at
+    ``index + j`` and attends ``kpos <= index + j`` — the decode
+    step's causal semantics per column), so column j's logits are
+    bit-identical to the logits a sequential ``decode_step`` over the
+    same tokens would produce.  Greedy acceptance against these logits
+    is therefore *exact*: a speculative completion equals the
+    non-speculative one token for token.  Columns at or beyond a
+    slot's ``n_valid`` return garbage logits (their KV writes drop out
+    of bounds) — callers only read accepted prefixes.
+    """
+    x, new_cache = _prefill_forward(cfg, params, cache, tokens, n_valid)
+    return _unembed(cfg, params, x), new_cache
+
+
+def verify_slot(cfg: ArchConfig, params, cache, slot,
+                tokens: jnp.ndarray, n_valid: jnp.ndarray):
+    """``verify_step`` over a SINGLE batch slot (the ``prefill_slot``
+    of verification: one compiled [1, C] program serves every slot).
+    tokens [1, C] int32; n_valid [1] int32.  Returns (logits
+    [1, C, vocab], new cache with only ``slot``'s column updated)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    sub = {name: jax.lax.dynamic_slice_in_dim(
+        leaf, slot, 1, axis=0 if name == "index" else 1)
+        for name, leaf in cache.items()}
+    logits, new = verify_step(cfg, params, sub, tokens, n_valid)
+    merged = {name: jax.lax.dynamic_update_slice_in_dim(
+        cache[name], new[name], slot, axis=0 if name == "index" else 1)
+        for name in cache}
+    return logits, merged
+
+
+def rollback_slot(cache, slot, n):
+    """Rewind batch slot ``slot`` by ``n`` positions (clamped at 0).
+
+    This is the whole rejection path of speculative decoding: the
+    per-slot position vector ``index[B]`` is decremented and *nothing
+    else is touched*.  KV columns past the new index hold the rejected
+    drafts' keys/values, but the decode/prefill validity mask only
+    attends ``kpos <= index`` and every position is rewritten (an
+    in-bounds ``.at[...].set``) before it becomes attendable again —
+    the same staleness argument that makes ``reset_slot`` + slot reuse
+    sound, so a rollback is a pure index decrement.  ``slot`` and
+    ``n`` may be traced (one compiled program serves every slot).
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    n = jnp.asarray(n, jnp.int32)
+    index = jnp.asarray(cache["index"], jnp.int32)
+    return dict(cache,
+                index=index.at[slot].set(
+                    jnp.maximum(index[slot] - n, 0)))
 
 
 def prefill_slot(cfg: ArchConfig, params, cache, slot,

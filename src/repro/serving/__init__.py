@@ -22,10 +22,18 @@ packed kernels execute at high occupancy":
     counters, and packed-multiply utilization (achieved
     MACs/wide-multiply via the existing density accounting), exported
     as a JSON snapshot (written atomically);
+  * ``spec``    — speculative decoding (§5.2): a self-speculation
+    draft (the same checkpoint re-quantized at forced low bits, which
+    the planner packs at strictly higher density on the same
+    datapath) proposes k tokens per round and the target verifies
+    them in ONE chunked wave — greedy acceptance is exact, so
+    speculative completions stay bit-identical to plain decode;
   * ``loadgen`` — Poisson / closed-loop drivers with backpressure
     retry + the client-side outcome ledger, the ``BENCH_5.json``
-    sweep, and the ``BENCH_7.json`` chaos sweep
-    (``python -m repro.serving.loadgen [--chaos]``).
+    sweep, the ``BENCH_7.json`` chaos sweep, the ``BENCH_9.json``
+    continuous-batching sweep and the ``BENCH_10.json`` speculative
+    sweep (``python -m repro.serving.loadgen [--chaos|--continuous|
+    --speculative]``).
 
 ``launch/serve.py`` is the thin CLI over this package.
 """
@@ -38,6 +46,8 @@ from .faults import (FAULT_CLASSES, FaultPlan, InjectedFault, WaveFaults,
                      corrupt_json_file)
 from .metrics import (EngineMetrics, latency_summary, packed_layer_stats,
                       packed_utilization, write_snapshot)
+from .spec import (SpecConfig, SpecDecoder, accept_length,
+                   calibrated_params)
 
 __all__ = [
     "Backpressure", "BucketShape", "BucketUnavailable",
@@ -49,4 +59,5 @@ __all__ = [
     "corrupt_json_file",
     "EngineMetrics", "latency_summary", "packed_layer_stats",
     "packed_utilization", "write_snapshot",
+    "SpecConfig", "SpecDecoder", "accept_length", "calibrated_params",
 ]

@@ -16,6 +16,10 @@ ends in exactly one client-side terminal outcome:
   ``shed``      admitted, then deadline-shed by the engine;
   ``rejected``  never admitted (backpressure retries exhausted,
                 infeasible deadline, or unfittable);
+  ``drained``   never admitted: the engine was draining/closed.  A
+                drain is terminal for the client — retrying it like
+                backpressure would spin the backoff loop against an
+                engine that has already said it will not admit;
   ``failed``    admitted, then terminally failed (fallback died too).
 
 An admitted rid missing from ``engine.outcomes`` after the drain is a
@@ -35,6 +39,13 @@ and emits the ``BENCH_9.json`` payload: per rate, wave occupancy
 (busy-slot-steps / slot-steps), p99, join counts, and a per-request
 bit-exactness audit of every completion (joiners included) against
 alone-runs of the same specs.
+
+Speculative mode (``--speculative``) briefly trains the checkpoint
+(acceptance is a checkpoint property), then drives identical seeded
+traffic through a plain and a speculative engine per rate and emits
+the ``BENCH_10.json`` payload: effective tokens-per-target-wave, p99,
+acceptance-length histograms, the target-vs-draft plan/density table,
+and the same alone-run bit-exactness audit on both curves.
 
 Closed loop (``--mode closed``): ``--users`` concurrent clients, each
 submitting its next request the moment the previous one completes —
@@ -57,7 +68,8 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .engine import Backpressure, Engine, PLAN_POLICIES
+from .engine import (Backpressure, Engine, EngineDraining,
+                     PLAN_POLICIES)
 from .faults import FAULT_CLASSES, FaultPlan, corrupt_json_file
 from .metrics import write_snapshot
 from .queue import BucketShape, DeadlineInfeasible
@@ -144,6 +156,12 @@ def run_poisson(engine: Engine, *, rate: float, duration_s: float,
                     deadline=(arrived + slo_s) if slo_s else None)
             except DeadlineInfeasible:  # admission control: no retry
                 outcomes[idx] = "rejected"
+            except EngineDraining:
+                # a draining engine will NOT admit until the drain
+                # ends — distinct terminal outcome, never retried
+                # (EngineDraining subclasses Backpressure, so this
+                # arm must precede the retry arm below)
+                outcomes[idx] = "drained"
             except Backpressure:
                 if attempt < retries:   # seeded exponential backoff
                     delay = backoff_s * (2 ** attempt) \
@@ -180,7 +198,8 @@ def run_poisson(engine: Engine, *, rate: float, duration_s: float,
             outcomes[idx] = "lost"
         else:
             outcomes[idx] = o["outcome"]
-    counts = {"ok": 0, "shed": 0, "rejected": 0, "failed": 0, "lost": 0}
+    counts = {"ok": 0, "shed": 0, "rejected": 0, "drained": 0,
+              "failed": 0, "lost": 0}
     for o in outcomes.values():
         counts[o] += 1
     snap = engine.metrics.snapshot()
@@ -547,6 +566,189 @@ def bench_continuous(arch: str, *, smoke: bool = True,
     }
 
 
+# ---------------------------------------------------------------------------
+# the BENCH_10 speculative-decoding sweep
+# ---------------------------------------------------------------------------
+
+def bench_speculative(arch: str, *, smoke: bool = True,
+                      rates: Sequence[float] = (60.0, 120.0, 200.0),
+                      duration_s: float = 1.0, prompt_len: int = 8,
+                      new_tokens: int = 12, batch: int = 4,
+                      s_maxes: Sequence[int] = (24, 48),
+                      weight_bits: int = 4, act_bits: int = 8,
+                      spec_k: int = 3, draft_bits: int = 4,
+                      draft_act_bits: int = 4, prefill_chunk: int = 4,
+                      train_steps: int = 350, seed: int = 0,
+                      verify: bool = True,
+                      trials: int = 1) -> Dict[str, Any]:
+    """Identical seeded Poisson traffic through two engines —
+    speculation off vs on — at every rate (BENCH_10).
+
+    The checkpoint is *briefly trained* first
+    (``spec.calibrated_params``): acceptance rate is a checkpoint
+    property, and a random-init model's near-tied logits mean the
+    low-bit draft never agrees with the target, which benchmarks the
+    machinery's overhead rather than its win.  Each point records p99,
+    effective tokens-per-target-wave (every verify round and every
+    plain decode launch counts as one target wave — a degrading
+    engine cannot flatter the ratio), the acceptance-length histogram,
+    and — with ``verify`` — a per-request alone-run bit-exactness
+    audit of every ok completion on BOTH curves against a fresh
+    non-speculative engine (greedy acceptance is exact, so mismatches
+    must be 0).  The payload also carries the per-layer target-vs-
+    draft plan table; the gate is every draft GEMM strictly denser on
+    the same datapath.
+
+    ``trials`` > 1 repeats every rate point as PAIRED trials — each
+    trial runs plain then spec back to back on the identical trace,
+    and the representative pair is the one with the *median
+    spec/plain p99 ratio* (the standard paired-comparison estimator):
+    tail latency of a ~1-second run is one or two requests, so a
+    single noisy-neighbor stall on the host flips a p99 comparison
+    that throughput says should never flip; pairing puts the stall on
+    both curves of one trial instead of one curve's whole block.
+    Audits are pooled across trials (the alone-run reference is
+    memoized per request spec, so extra trials re-verify against
+    cached references at negligible cost)."""
+    import jax
+
+    from repro.configs.registry import get_arch
+    from .spec import calibrated_params
+
+    cfg = get_arch(arch)
+    if smoke:
+        cfg = cfg.reduced()
+    params = calibrated_params(cfg, steps=train_steps, seed=seed)
+    buckets = tuple(BucketShape(batch, s) for s in s_maxes)
+
+    verify_engine: Optional[Engine] = None
+    alone_cache: Dict[Any, Optional[tuple]] = {}
+
+    def alone_tokens(prompt, nt):
+        nonlocal verify_engine
+        key = (prompt, nt)
+        if key in alone_cache:
+            return alone_cache[key]
+        if verify_engine is None:
+            # the reference is always NON-speculative: both curves
+            # audit against plain decode
+            verify_engine = Engine(
+                cfg, params, compute="sdv", weight_bits=weight_bits,
+                act_bits=act_bits, buckets=buckets,
+                midwave_joins=False, prefill_chunk=prefill_chunk)
+            for b in buckets:
+                verify_engine.warmup(b)
+        rid = verify_engine.submit(prompt, nt)
+        verify_engine.drain()
+        toks = next((tuple(c.tokens) for c in verify_engine.completions
+                     if c.rid == rid), None)
+        alone_cache[key] = toks
+        return toks
+
+    points: List[Dict[str, Any]] = []
+    plan_table: Dict[str, Any] = {}
+    for ri, rate in enumerate(rates):
+        trace_rng = np.random.default_rng(seed + ri)
+        arrivals = poisson_arrivals(rate, duration_s, trace_rng)
+        specs = _request_specs(len(arrivals), cfg.vocab, prompt_len,
+                               new_tokens, trace_rng)
+        pairs: List[Dict[bool, Dict[str, Any]]] = []
+        audit = {False: [0, 0], True: [0, 0]}  # checked, mismatches
+        for _ in range(max(trials, 1)):
+            pair: Dict[bool, Dict[str, Any]] = {}
+            # paired: plain and spec run back to back within the
+            # trial, so a host stall lands on both curves of ONE
+            # pair, not on one curve's whole trial block
+            for speculative in (False, True):
+                engine = Engine(cfg, params, compute="sdv",
+                                weight_bits=weight_bits,
+                                act_bits=act_bits, buckets=buckets,
+                                prefill_chunk=prefill_chunk,
+                                speculative=speculative, spec_k=spec_k,
+                                draft_bits=draft_bits,
+                                draft_act_bits=draft_act_bits)
+                for b in buckets:    # steady state: compile cost is
+                    engine.warmup(b)  # not charged to early requests
+                admitted: Dict[int, int] = {}
+                snap = run_poisson(engine, rate=rate,
+                                   duration_s=duration_s,
+                                   prompt_len=prompt_len,
+                                   new_tokens=new_tokens,
+                                   rng=np.random.default_rng(seed + ri),
+                                   admitted_out=admitted)
+                if verify:
+                    by_rid = {c.rid: c for c in engine.completions}
+                    for idx, rid in sorted(admitted.items()):
+                        o = engine.outcomes.get(rid)
+                        if o is None or o["outcome"] != "ok":
+                            continue
+                        comp = by_rid.get(rid)
+                        audit[speculative][0] += 1
+                        if comp is None:
+                            audit[speculative][1] += 1
+                            continue
+                        ref = alone_tokens(*specs[idx])
+                        if ref is None or tuple(comp.tokens) != ref:
+                            audit[speculative][1] += 1
+                if speculative and not plan_table:
+                    plan_table = engine.spec_report()
+                pair[speculative] = snap
+            pairs.append(pair)
+        # the representative pair has the MEDIAN spec/plain p99 ratio
+        # (paired-comparison estimator; both curves come from the same
+        # trial, so every counter stays mutually consistent); every
+        # trial's audit counts toward the pooled bit-exactness totals
+        def _ratio(p: Dict[bool, Dict[str, Any]]) -> float:
+            off = max(p[False]["latency"]["p99_ms"], 1e-9)
+            return p[True]["latency"]["p99_ms"] / off
+        order = sorted(pairs, key=_ratio)
+        rep = order[(len(order) - 1) // 2]
+        for speculative in (False, True):
+            snap = rep[speculative]
+            sp = snap["speculative"]
+            points.append({
+                **snap,
+                # the metrics snapshot's "speculative" sub-dict stays
+                # under that key; this level's flag names the curve
+                "speculative": speculative,
+                "spec_counters": sp,
+                "rate_per_s": rate,
+                "p99_ms": snap["latency"]["p99_ms"],
+                "p99_ms_trials": [p[speculative]["latency"]["p99_ms"]
+                                  for p in pairs],
+                "tokens_per_s": snap["tokens_per_s"],
+                "tokens_per_target_wave": sp["tokens_per_target_wave"],
+                "mean_accepted": sp["mean_accepted"],
+                "acceptance_hist": sp["acceptance_hist"],
+                "spec_degraded": sp["degraded_buckets"],
+                "bit_exact_checked": audit[speculative][0],
+                "bit_exact_mismatches": audit[speculative][1],
+            })
+
+    return {
+        "bench": "speculative_decoding",
+        "pr": 10,
+        "arch": cfg.name,
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "buckets": [{"batch": b.batch, "s_max": b.s_max} for b in buckets],
+        "rates_per_s": list(rates),
+        "duration_s": duration_s,
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "prefill_chunk": prefill_chunk,
+        "spec_k": spec_k,
+        "target_bits": {"w": weight_bits, "a": act_bits},
+        "draft_bits": {"w": draft_bits, "a": draft_act_bits},
+        "calibration_steps": train_steps,
+        "trials": max(trials, 1),
+        "seed": seed,
+        "bit_exact_verified": verify,
+        "plan_table": plan_table,
+        "points": points,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -591,6 +793,27 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=4,
                     help="teacher-forced prompt tokens per prefill "
                          "iteration (continuous sweep)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative-decoding sweep: identical traffic "
+                         "with speculation off vs on (BENCH_10); the "
+                         "checkpoint is briefly trained first so the "
+                         "draft has something to agree with")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="drafted tokens per verification wave")
+    ap.add_argument("--draft-bits", type=int, default=4,
+                    help="draft weight bits (self-speculation)")
+    ap.add_argument("--draft-act-bits", type=int, default=4,
+                    help="draft activation bits — the knob that buys "
+                         "packing density (see serving.spec)")
+    ap.add_argument("--train-steps", type=int, default=350,
+                    help="calibration Adam steps before the "
+                         "speculative sweep")
+    ap.add_argument("--trials", type=int, default=1,
+                    help="paired repeats per speculative-sweep rate: "
+                         "each trial runs plain+spec back to back; "
+                         "the median-p99-ratio pair represents the "
+                         "point (host-noise robustness; audits are "
+                         "pooled)")
     ap.add_argument("--no-verify", dest="verify", action="store_false",
                     help="skip the per-request alone-run bit-exactness "
                          "check in the continuous sweep")
@@ -601,7 +824,36 @@ def main(argv=None):
                     help="write the payload to this path (atomic)")
     args = ap.parse_args(argv)
 
-    if args.continuous:
+    if args.speculative:
+        payload = bench_speculative(
+            args.arch, smoke=args.smoke,
+            rates=[float(r) for r in args.rates.split(",") if r],
+            duration_s=args.duration,
+            prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+            batch=args.batch,
+            s_maxes=[int(s) for s in args.buckets.split(",") if s],
+            weight_bits=args.weight_bits, act_bits=args.act_bits,
+            spec_k=args.spec_k, draft_bits=args.draft_bits,
+            draft_act_bits=args.draft_act_bits,
+            prefill_chunk=args.prefill_chunk,
+            train_steps=args.train_steps, seed=args.seed,
+            verify=args.verify, trials=args.trials)
+        for p in payload["points"]:
+            tag = "spec  " if p["speculative"] else "plain "
+            print(f"{tag}@ {p['rate_per_s']:6.1f} req/s: "
+                  f"{p['requests_completed']} done, "
+                  f"tok/target-wave {p['tokens_per_target_wave']:.2f}, "
+                  f"mean accepted {p['mean_accepted']:.2f}, "
+                  f"p99 {p['p99_ms']:.1f} ms, "
+                  f"{p['tokens_per_s']:.1f} tok/s, "
+                  f"bit-exact {p['bit_exact_checked']} checked / "
+                  f"{p['bit_exact_mismatches']} mismatches")
+        for key, rep in payload["plan_table"].items():
+            denser = sum(1 for l in rep["layers"] if l["draft_denser"])
+            print(f"bucket {key}: spec_on={rep['spec_on']}, "
+                  f"{denser}/{len(rep['layers'])} draft layers "
+                  f"strictly denser")
+    elif args.continuous:
         payload = bench_continuous(
             args.arch, smoke=args.smoke,
             rates=[float(r) for r in args.rates.split(",") if r],

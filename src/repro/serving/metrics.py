@@ -180,6 +180,19 @@ class EngineMetrics:
     fallback_waves: int = 0
     midwave_joins: int = 0          # sessions that joined a running wave
     tokens_out: int = 0
+    # -- target-wave accounting (speculative decoding, DESIGN.md §5.2):
+    # a "target wave" is one launch of the target model — either a
+    # plain decode step or one spec verify wave.  tokens emitted per
+    # target wave is the speedup currency BENCH_10 sweeps.
+    decode_launches: int = 0        # plain decode programs dispatched
+    decode_tokens: int = 0          # tokens those launches emitted
+    spec_iters: int = 0             # draft+verify rounds completed
+    spec_tokens: int = 0            # tokens those rounds emitted
+    spec_draft_wall_s: float = 0.0
+    spec_verify_wall_s: float = 0.0
+    spec_accept_hist: Dict[int, int] = dataclasses.field(
+        default_factory=dict)      # emitted-per-slot-round -> count
+    spec_degraded: int = 0          # buckets that fell back to plain
     waves: int = 0
     wave_steps: int = 0
     wave_wall_s: float = 0.0
@@ -222,6 +235,41 @@ class EngineMetrics:
 
     def record_join(self) -> None:
         self.midwave_joins += 1
+
+    def record_decode_launch(self, tokens_emitted: int) -> None:
+        """One plain (non-speculative) decode-step launch and the
+        tokens it appended across the batch (teacher-forced slots
+        emit nothing)."""
+        self.decode_launches += 1
+        self.decode_tokens += tokens_emitted
+
+    def record_spec_round(self, bucket_key: str, *,
+                          accepted: List[int], draft_s: float,
+                          verify_s: float) -> None:
+        """One speculative round: per speculating slot, the number of
+        tokens it emitted (1 = bonus only, k+1 = everything accepted),
+        plus the round's draft and verify wall clocks."""
+        self.spec_iters += 1
+        self.spec_draft_wall_s += draft_s
+        self.spec_verify_wall_s += verify_s
+        for n in accepted:
+            self.spec_tokens += n
+            self.spec_accept_hist[n] = self.spec_accept_hist.get(n, 0) + 1
+        b = self.per_bucket.setdefault(
+            bucket_key, {"waves": 0, "steps": 0, "wall_s": 0.0,
+                         "requests": 0})
+        b["spec_iters"] = b.get("spec_iters", 0) + 1
+        b["spec_tokens"] = b.get("spec_tokens", 0) + sum(accepted)
+
+    def record_spec_degraded(self, bucket_key: str) -> None:
+        """A bucket's speculative path failed (draft resolution,
+        compile or runtime): it degraded to plain decode on the SAME
+        bucket — never to the batch-1 fallback."""
+        self.spec_degraded += 1
+        b = self.per_bucket.setdefault(
+            bucket_key, {"waves": 0, "steps": 0, "wall_s": 0.0,
+                         "requests": 0})
+        b["spec_degraded"] = b.get("spec_degraded", 0) + 1
 
     def record_rejection(self, infeasible: bool = False) -> None:
         self.rejected += 1
@@ -275,6 +323,28 @@ class EngineMetrics:
                          "requests": 0})
         b["utilization"] = util
 
+    def _spec_snapshot(self) -> Dict[str, Any]:
+        """Effective tokens-per-target-wave counts EVERY target launch
+        — verify waves and plain decode steps alike — so a spec engine
+        that keeps degrading cannot report a flattering ratio."""
+        target_waves = self.spec_iters + self.decode_launches
+        generated = self.spec_tokens + self.decode_tokens
+        return {
+            "rounds": self.spec_iters,
+            "spec_tokens": self.spec_tokens,
+            "acceptance_hist": {str(k): v for k, v in
+                                sorted(self.spec_accept_hist.items())},
+            "mean_accepted": (self.spec_tokens
+                              / max(sum(self.spec_accept_hist.values()),
+                                    1)),
+            "draft_wall_s": self.spec_draft_wall_s,
+            "verify_wall_s": self.spec_verify_wall_s,
+            "degraded_buckets": self.spec_degraded,
+            "plain_decode_launches": self.decode_launches,
+            "tokens_per_target_wave": (generated / target_waves
+                                       if target_waves else 0.0),
+        }
+
     def snapshot(self) -> Dict[str, Any]:
         span = 0.0
         if self.started_t is not None and self.finished_t is not None:
@@ -299,6 +369,7 @@ class EngineMetrics:
             },
             "tokens_out": self.tokens_out,
             "tokens_per_s": self.tokens_out / span if span else 0.0,
+            "speculative": self._spec_snapshot(),
             "latency": latency_summary(self.latencies_s),
             "queue_wait": latency_summary(self.queue_wait_s),
             "queue_depth": {

@@ -1,0 +1,305 @@
+"""Speculative decoding on the packed datapath (DESIGN.md §5.2).
+
+The paper's density law (Eq. 4) says the wide word fits
+``n = 1 + (budget - w_a - 1) // L`` operands — so an *aggressively
+quantized copy of the same weights* packs denser than the serving
+tier and its decode step is proportionally cheaper on the very
+datapath the target already occupies.  This module exploits that
+temporally: a **self-speculation draft** — the target checkpoint
+re-quantized by ``serve_params`` at forced low bits, no second
+checkpoint — proposes ``k`` tokens per round, and the target scores
+all ``k + 1`` positions in ONE chunked verification wave
+(``models.verify_step``), accepting the longest prefix that matches
+its own greedy argmax.
+
+Two properties carry the whole design:
+
+* **Exactness.**  ``verify_step`` runs the chunked-prefill layer
+  stack with logits kept, so column ``j``'s logits are bit-identical
+  to a sequential ``decode_step``'s over the same tokens (pinned in
+  ``tests/test_spec.py``).  Accepted tokens are the *target's* argmax
+  choices — the draft only decides how many of them arrive per wave —
+  so a speculative completion is bit-identical to non-speculative
+  decode regardless of draft quality.  A useless draft costs
+  throughput, never correctness.
+* **Density.**  The planner resolves the draft's GEMMs at its own
+  (higher) density ``n`` on the same datapath.  Finding recorded in
+  ROADMAP: on DSP48E2 the 27-bit packed port caps W4A8/W2A8 alike at
+  n = 3 — *weight* bits alone do not raise SDV density because the
+  lane width is ``L = w_a + w_b - 1`` and the activation side ``w_b``
+  dominates it.  Shrinking activations is what packs denser: W4A4
+  resolves to n = 4 and W2A4 to n = 5, strictly above the W4A8
+  target's n = 3.  The default draft is therefore **W4A4**, not W2A8.
+
+A full round is exactly TWO device dispatches and two host round
+trips.  The draft program (``lax.scan`` over ``k`` decode steps) runs
+on a *fork of the target's own KV cache* — self-speculation shares
+the cache layout, so the draft needs no cache of its own: no doubled
+prefill, no draft-side rollback, no per-slot reset on mid-wave joins;
+the fork is discarded after proposing.  The verify program fuses the
+chunked target wave, the greedy argmax, longest-prefix acceptance
+against the device-resident proposals, and the rejected tail's index
+decrement on the target cache.  The standalone ``models.
+rollback_slot`` remains the semantic contract and the test oracle for
+that index decrement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculation knobs.  ``k`` drafted tokens per verify wave;
+    ``draft_bits``/``draft_act_bits`` are the forced quantization of
+    the self-speculation draft (defaults pick the A4 tier — see the
+    module docstring for why activation bits, not weight bits, buy
+    packing density)."""
+    k: int = 3
+    draft_bits: int = 4
+    draft_act_bits: int = 4
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {self.k}")
+
+
+class SpecDecoder:
+    """Draft derivation + the compiled speculative programs.
+
+    Owned by the engine (one per process).  The decoder holds only
+    compiled callables and the memoized draft parameter trees — the
+    draft itself is stateless (it forks the target's cache per round),
+    so buckets sharing a batch width share the draft exactly like
+    they share target qparams.
+    """
+
+    def __init__(self, cfg, params, config: Optional[SpecConfig] = None, *,
+                 compute: str = "sdv", min_size: int = 1024,
+                 conv_datapath: str = "bseg",
+                 plan_policy: str = "auto",
+                 plan_cache: Optional[str] = None):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import decode_step, rollback_slot, verify_step
+
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"speculative decoding needs a KV-cache family with "
+                f"chunked verify support, got {cfg.family!r}")
+        self.cfg = cfg
+        self.params = params
+        self.config = config or SpecConfig()
+        self.compute = compute
+        self.min_size = min_size
+        self.conv_datapath = conv_datapath
+        self.plan_policy = plan_policy
+        self.plan_cache = plan_cache
+        self._draft_by_rows: Dict[int, Any] = {}
+        k, vocab = self.config.k, cfg.vocab
+
+        def draft_prog(qp, cache, pending, adv):
+            """k greedy draft steps on a FORK of the *target's* own KV
+            cache.  Self-speculation shares ``cfg`` — and therefore
+            the cache layout — so the draft reads the target's exact
+            history KV (the strongest context a draft could have) and
+            writes its speculative positions into a functional fork
+            that is simply discarded after proposing: the verify wave
+            recomputes those positions at target precision anyway.
+            The draft is therefore STATELESS — no second cache to
+            prefill chunk-by-chunk alongside the target (which doubled
+            prefill cost), nothing to roll back, nothing to reset when
+            a joiner takes the slot.  pending [B] int32 is each slot's
+            next unconsumed token; adv [B] freezes non-speculating
+            slots (their chain runs on garbage and is discarded).
+            Returns proposals [B, k]."""
+            # pin the carried index dtype: decode_step emits int32, and
+            # a scan carry must be type-stable even when the incoming
+            # target cache holds a widened index (x64 environments)
+            cache = dict(cache, index=jnp.asarray(cache["index"],
+                                                  jnp.int32))
+            def body(carry, _):
+                c, tok = carry
+                logits, c = decode_step(cfg, qp, c, tok[:, None],
+                                        advance=adv)
+                nxt = jnp.argmax(logits[:, -1, :vocab],
+                                 axis=-1).astype(jnp.int32)
+                return (c, nxt), nxt
+            _, drafted = jax.lax.scan(
+                body, (cache, jnp.asarray(pending, jnp.int32)), None,
+                length=k)
+            return jnp.transpose(drafted)
+
+        def verify_prog(qp, cache, pending, props, adv, remaining):
+            """One chunked target wave over all k + 1 positions with
+            acceptance AND the target-cache rollback fused on-device.
+
+            The proposals stay device-resident (the draft's output
+            feeds this dispatch directly — they never visit the host),
+            the greedy argmax runs on-device so the per-round transfer
+            is [B, k+1] token ids instead of [B, k+1, vocab] logits
+            (the host-side argmax was the single largest per-round
+            cost in profiling), and the longest-prefix acceptance
+            ``t = min(m + 1, remaining)`` plus the rejected-tail index
+            decrement happen in the same program — the host reads back
+            (greedy, t) and is done.  remaining [B] caps acceptance at
+            each slot's outstanding token budget; frozen slots
+            (adv 0) accept 0 and never move."""
+            tokens = jnp.concatenate(
+                [jnp.asarray(pending, jnp.int32)[:, None], props], axis=1)
+            logits, c2 = verify_step(cfg, qp, cache, tokens,
+                                     adv * (k + 1))
+            greedy = jnp.argmax(logits[:, :, :vocab],
+                                axis=-1).astype(jnp.int32)
+            hits = (props == greedy[:, :k]).astype(jnp.int32)
+            m = jnp.sum(jnp.cumprod(hits, axis=1), axis=1)
+            t = jnp.where(adv > 0,
+                          jnp.minimum(m + 1,
+                                      jnp.asarray(remaining, jnp.int32)),
+                          0)
+            rewind = jnp.where(adv > 0, (k + 1) - t, 0)
+            index = jnp.asarray(c2["index"], jnp.int32)
+            c2 = dict(c2, index=jnp.maximum(index - rewind, 0))
+            return greedy, t, c2
+
+        #: (draft_qparams, target_cache, pending [B], adv [B])
+        #: -> proposals [B, k]  (the cache fork is discarded)
+        self.draft = jax.jit(draft_prog)
+        #: (target_qparams, cache, pending [B], proposals [B, k],
+        #: adv [B], remaining [B]) -> (greedy argmax [B, k+1],
+        #: accepted t [B], new cache already rolled back)
+        self.verify = jax.jit(verify_prog)
+        #: (cache, slot, n) -> cache with slot rewound n positions
+        self.rollback = jax.jit(lambda c, s, n: rollback_slot(c, s, n))
+
+    def draft_qparams(self, rows: int) -> Any:
+        """The self-speculation draft: the SAME checkpoint through
+        ``serve_params`` at the forced draft bits, planner-resolved
+        for ``rows`` decode rows (memoized per batch width, exactly
+        like the engine's target qparams)."""
+        from repro.models import serve_params
+        if rows not in self._draft_by_rows:
+            self._draft_by_rows[rows] = serve_params(
+                self.params, bits=self.config.draft_bits,
+                min_size=self.min_size, compute=self.compute,
+                act_bits=self.config.draft_act_bits,
+                conv_bseg=(self.compute == "sdv"
+                           and self.conv_datapath == "bseg"),
+                plan_policy=self.plan_policy, plan_cache=self.plan_cache,
+                rows=rows)
+        return self._draft_by_rows[rows]
+
+    def plan_comparison(self, target_qp: Any, rows: int
+                        ) -> List[Dict[str, Any]]:
+        """Per GEMM layer: the target's resolved plan vs the draft's,
+        with packing densities — the acceptance gate is every draft
+        layer strictly denser on the same datapath."""
+        t = _sdv_plans(target_qp)
+        d = _sdv_plans(self.draft_qparams(rows))
+        out = []
+        for path, (tn, tdesc, tdp) in sorted(t.items()):
+            dn, ddesc, ddp = d.get(path, (0, "-", "-"))
+            out.append({
+                "layer": path,
+                "datapath": tdp,
+                "target_plan": tdesc, "target_density": tn,
+                "draft_plan": ddesc, "draft_density": dn,
+                "draft_denser": dn > tn and ddp == tdp,
+            })
+        return out
+
+
+def _sdv_plans(tree: Any) -> Dict[str, Any]:
+    from repro.models.quantized import SDVLinear
+    from repro.planner import describe_plan
+    out: Dict[str, Any] = {}
+
+    def walk(t, path):
+        if isinstance(t, dict):
+            for k, v in t.items():
+                walk(v, f"{path}/{k}" if path else k)
+        elif isinstance(t, SDVLinear):
+            out[path] = (int(t.plan.density), describe_plan(t.plan),
+                         t.plan.spec.name)
+
+    walk(tree, "")
+    return out
+
+
+def accept_length(proposals: np.ndarray, greedy: np.ndarray) -> int:
+    """Longest accepted prefix: the number of draft proposals matching
+    the target's greedy choices.  ``proposals`` [k] holds d_1..d_k,
+    ``greedy`` [>= k] the target argmax at the verified positions
+    (g_j is the target's choice after consuming d_1..d_j).  Proposal
+    d_{j+1} is accepted iff it equals g_j — the token the target would
+    have emitted at that point — so the emitted tokens are always
+    g_0..g_m: the target's own outputs, never the draft's."""
+    m = 0
+    k = len(proposals)
+    while m < k and int(proposals[m]) == int(greedy[m]):
+        m += 1
+    return m
+
+
+def calibrated_params(cfg, *, steps: int = 350, seed: int = 0,
+                      lr: float = 1e-2, batch: int = 8, seq: int = 32,
+                      mult: int = 3, offset: int = 7) -> Any:
+    """A briefly-trained checkpoint for speculative benches and demos.
+
+    Acceptance rate is a property of the *checkpoint*, not the
+    machinery: a random-init model's logits are near-tied across the
+    vocab, so any re-quantized draft flips the argmax and nothing is
+    ever accepted (the pipeline stays bit-exact — it just never goes
+    faster than plain decode).  A few hundred Adam steps on a
+    synthetic affine-cycle stream (``next = (mult * t + offset) %
+    vocab``) peak the next-token distribution enough that the W4A4
+    draft agrees with the W4A8 target almost everywhere — realistic
+    acceptance behavior from a fully deterministic, seeded setup.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import init_params, values, Rules
+    from repro.models.transformer import forward
+
+    rules = Rules(tp=None, fsdp=None, ep=None, batch=())
+    params = values(init_params(cfg, rules, jax.random.PRNGKey(seed)))
+
+    def loss_fn(p, toks):
+        logits = forward(cfg, p, {"tokens": toks})
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(lp, toks[:, 1:, None], axis=-1)
+        return nll.mean()
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    @jax.jit
+    def adam(p, g, m, v, t):
+        m = jax.tree_util.tree_map(
+            lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree_util.tree_map(
+            lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        def upd(a, mm, vv):
+            mh = mm / (1 - b1 ** t)
+            vh = vv / (1 - b2 ** t)
+            return (a - lr * mh / (jnp.sqrt(vh) + eps)).astype(a.dtype)
+        return jax.tree_util.tree_map(upd, p, m, v), m, v
+
+    rng = np.random.default_rng(seed)
+    for t in range(1, steps + 1):
+        col = rng.integers(0, cfg.vocab, (batch, 1))
+        cols = [col]
+        for _ in range(seq - 1):
+            cols.append((cols[-1] * mult + offset) % cfg.vocab)
+        toks = jnp.asarray(np.concatenate(cols, 1), jnp.int32)
+        _, g = grad_fn(params, toks)
+        params, m, v = adam(params, g, m, v,
+                            jnp.asarray(t, jnp.float32))
+    return params
